@@ -1,0 +1,57 @@
+"""Shared benchmark helpers: wall-clock timing + v5e roofline projection.
+
+This container runs on CPU, so every benchmark reports BOTH:
+  * ``us_per_call`` — measured CPU wall time (jitted, warmed, median);
+  * ``derived``     — the TPU-v5e-projected figure for the paper's metric
+    (speedup / GFLOPS), from the analytic pipeline + roofline model that
+    the dry-run numbers validate (see EXPERIMENTS.md §Paper-claims).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+# v5e hardware constants (same as §Roofline)
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # B/s / chip
+LINK_BW = 50e9             # B/s / ICI link
+
+PAPER_LINK_BW = 40e9 / 8   # the paper's 40 Gb/s optical ring, in B/s
+
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall seconds per call of a jax function (blocks on result)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def stencil_roofline_gflops(flops_per_cell: int, bytes_per_cell: int = 8,
+                            n_units: int = 1) -> float:
+    """Projected stencil GFLOP/s on v5e: memory-bound at AI = f/8
+    (one f32 read + one f32 write per cell with VMEM-resident halos).
+    ``n_units`` = pipelined stencil stages (iteration parallelism) —
+    each stage re-reads its input from VMEM, so stages multiply
+    throughput until compute-bound."""
+    ai = flops_per_cell / bytes_per_cell
+    per_unit = min(PEAK_FLOPS, HBM_BW * ai)
+    return min(per_unit * n_units, PEAK_FLOPS) / 1e9
+
+
+def pipeline_speedup(n_stages: int, n_micro: int) -> float:
+    """Throughput speedup of an S-deep ring pipeline fed M microbatches
+    vs a single unit: S · M / (M + S − 1)."""
+    return n_stages * n_micro / (n_micro + n_stages - 1)
+
+
+def emit(rows: list[tuple]) -> None:
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,46 @@
+"""Fig. 6 — speedup vs number of FPGAs (here: pipeline stage groups).
+
+For each of the five stencil IPs: measure one IP-iteration on CPU (the
+per-stage service time), then derive the N-board throughput speedup of the
+ring pipeline exactly as the testbed realizes it: N boards × (Table II
+IPs/board) chained stages, grid tiles streaming through (M = 32 tiles).
+The paper's near-linear curve falls out of S·M/(M+S−1); the collective
+term stays negligible (halo bytes ≪ compute — see table in EXPERIMENTS).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, pipeline_speedup, time_fn
+from repro.core.variant import resolve
+from repro.stencil.ips import TABLE_II
+
+BENCH_GRID_2D = (256, 256)
+BENCH_GRID_3D = (32, 32, 32)
+N_MICRO = 128  # 4096-row grid in 32-row streaming blocks (cell-granular FPGA stream)
+
+
+def rows():
+    out = []
+    for name, ip in TABLE_II.items():
+        shape = BENCH_GRID_2D if ip.ndim == 2 else BENCH_GRID_3D
+        grid = jnp.ones(shape, jnp.float32)
+        hw = jax.jit(resolve(ip.fn, "tpu"))
+        t1 = time_fn(hw, grid)
+        for n_fpga in range(1, 7):
+            stages = n_fpga * ip.ips_per_fpga
+            sp = pipeline_speedup(stages, N_MICRO) / ip.ips_per_fpga
+            # normalized to ONE FPGA (stages = ips_per_fpga), like Fig. 6
+            sp1 = pipeline_speedup(ip.ips_per_fpga, N_MICRO) / ip.ips_per_fpga
+            out.append((f"fig6/{name}/fpgas={n_fpga}", t1 * 1e6,
+                        f"{sp / sp1:.2f}x"))
+    return out
+
+
+def main():
+    emit(rows())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Fig. 7 — GFLOPS vs number of FPGAs per kernel.
+
+``us_per_call`` measures the CPU hw-variant iteration; ``derived`` is the
+v5e-projected GFLOP/s at N boards: per-stage memory-bound stencil
+throughput × pipeline speedup. Orderings match the paper: laplace2d (4
+IPs/board) tops the chart, 3-D kernels benefit from their grid size."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import (emit, pipeline_speedup,
+                               stencil_roofline_gflops, time_fn)
+from repro.core.variant import resolve
+from repro.stencil.ips import TABLE_II
+
+N_MICRO = 128  # 4096-row grid in 32-row streaming blocks (cell-granular FPGA stream)
+
+
+def rows():
+    out = []
+    for name, ip in TABLE_II.items():
+        grid = jnp.ones(ip.grid_size, jnp.float32)
+        hw = jax.jit(resolve(ip.fn, "tpu"))
+        t1 = time_fn(hw, grid, warmup=1, iters=3)
+        g1 = stencil_roofline_gflops(ip.flops_per_cell)
+        for n_fpga in range(1, 7):
+            stages = n_fpga * ip.ips_per_fpga
+            gf = g1 * pipeline_speedup(stages, N_MICRO)
+            out.append((f"fig7/{name}/fpgas={n_fpga}", t1 * 1e6,
+                        f"{gf:.0f}GFLOPS"))
+    return out
+
+
+def main():
+    emit(rows())
+
+
+if __name__ == "__main__":
+    main()

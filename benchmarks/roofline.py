@@ -1,0 +1,117 @@
+"""§Roofline — three-term roofline per (arch × shape × mesh) from the
+dry-run records.
+
+    PYTHONPATH=src:. python -m benchmarks.roofline [--mesh single]
+        [--fmt md|csv] [--variant baseline]
+
+Terms (per step, seconds; HLO numbers are per-device so peaks are
+per-chip):
+
+    t_compute = hlo_flops / 197e12         (bf16 peak)
+    t_memory  = hlo_bytes / 819e9          (HBM)
+    t_coll    = coll_wire_bytes / 50e9     (ICI per link)
+
+collective wire bytes: all-gather/reduce-scatter count (n−1)/n of the
+result payload, all-reduce 2(n−1)/n, permute 1×, all-to-all (n−1)/n — per
+the participating-axis size recorded in the HLO groups (approximated by
+the largest mesh axis when unknown — conservative).
+
+``roofline_frac`` = t_compute / max(terms): the fraction of peak FLOP/s
+the step would sustain when limited by its dominant term.
+``useful`` = MODEL_FLOPS / (hlo_flops × devices): how much compiled
+compute is "useful" (catches remat/redundancy waste; > 1 never, ≈ 0.75
+with full-block remat for trainers).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+PEAK = 197e12
+HBM = 819e9
+LINK = 50e9
+
+# wire-cost multiplier per collective kind (fraction of result payload
+# actually crossing links, ring-algorithm, for axis size n)
+def _wire_factor(kind: str, n: float) -> float:
+    if n <= 1:
+        return 0.0
+    f = (n - 1) / n
+    return {"all-gather": f, "reduce-scatter": f, "all-reduce": 2 * f,
+            "collective-permute": 1.0, "all-to-all": f,
+            "collective-broadcast": 1.0}.get(kind, 1.0)
+
+
+def load_records(out_dir: str, mesh: str | None = None,
+                 variant: str = "baseline") -> list[dict]:
+    recs = []
+    for p in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(p) as f:
+            r = json.load(f)
+        if mesh and r["mesh"] != mesh:
+            continue
+        if r.get("variant", "baseline") != variant:
+            continue
+        recs.append(r)
+    return recs
+
+
+def terms(rec: dict) -> dict:
+    n_dev = rec["devices"]
+    tp = 16
+    t_comp = rec["hlo_flops"] / PEAK
+    t_mem = rec["hlo_bytes"] / HBM
+    wire = 0.0
+    for kind, b in rec["collectives"]["bytes"].items():
+        wire += b * _wire_factor(kind, tp)
+    t_coll = wire / LINK
+    dominant = max(("compute", t_comp), ("memory", t_mem),
+                   ("collective", t_coll), key=lambda kv: kv[1])
+    useful = (rec["model_flops"] / (rec["hlo_flops"] * n_dev)
+              if rec["hlo_flops"] else 0.0)
+    frac = t_comp / max(t_comp, t_mem, t_coll, 1e-30)
+    return {"t_compute": t_comp, "t_memory": t_mem, "t_coll": t_coll,
+            "dominant": dominant[0], "useful": useful,
+            "roofline_frac": frac,
+            "fits_hbm": (rec.get("memory") or {}).get(
+                "temp_size_in_bytes", 0) + ((rec.get("memory") or {}).get(
+                    "argument_size_in_bytes", 0)) <= 16e9}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="single",
+                    help="single | multi | all (roofline table is "
+                    "single-pod per the assignment)")
+    ap.add_argument("--fmt", choices=["md", "csv"], default="md")
+    ap.add_argument("--variant", default="baseline")
+    args = ap.parse_args()
+    recs = load_records(args.dir, None if args.mesh == "all" else args.mesh,
+                        args.variant)
+    rows = []
+    for r in recs:
+        t = terms(r)
+        rows.append((r["arch"], r["shape"], r["mesh"], t))
+    if args.fmt == "csv":
+        print("arch,shape,mesh,t_compute_s,t_memory_s,t_coll_s,dominant,"
+              "useful,roofline_frac,fits_hbm")
+        for a, s, m, t in rows:
+            print(f"{a},{s},{m},{t['t_compute']:.4e},{t['t_memory']:.4e},"
+                  f"{t['t_coll']:.4e},{t['dominant']},{t['useful']:.3f},"
+                  f"{t['roofline_frac']:.3f},{t['fits_hbm']}")
+        return
+    print("| arch | shape | mesh | t_compute | t_memory | t_coll |"
+          " dominant | useful | roofline |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for a, s, m, t in rows:
+        print(f"| {a} | {s} | {m} | {t['t_compute']:.3e} |"
+              f" {t['t_memory']:.3e} | {t['t_coll']:.3e} |"
+              f" **{t['dominant']}** | {t['useful']:.2f} |"
+              f" {t['roofline_frac']:.3f} |")
+
+
+if __name__ == "__main__":
+    main()

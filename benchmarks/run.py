@@ -1,0 +1,35 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig6,table3]
+
+Prints ``name,us_per_call,derived`` CSV (one header per module section).
+The roofline table itself is produced by ``benchmarks.roofline`` from the
+dry-run records.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+MODULES = ["fig6_fpga_scaling", "fig7_gflops_scaling",
+           "fig8_iteration_scaling", "fig9_ip_scaling",
+           "table3_resources", "elision_bytes"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module prefixes")
+    args = ap.parse_args()
+    only = args.only.split(",") if args.only else None
+    import importlib
+    for name in MODULES:
+        if only and not any(name.startswith(o) for o in only):
+            continue
+        print(f"# === {name} ===", flush=True)
+        mod = importlib.import_module(f"benchmarks.{name}")
+        mod.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Table III analogue — per-IP resource usage.
+
+FPGA LUT/BRAM/DSP counts have no TPU meaning; the TPU-native resources of
+a stencil IP are its VMEM working set (the shift-register analogue), its
+arithmetic intensity, and the roofline utilization of one chip.  One row
+per stencil IP; ``us_per_call`` is the measured CPU hw-variant call on the
+Table II grid."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import HBM_BW, PEAK_FLOPS, emit, time_fn
+from repro.core.variant import resolve
+from repro.kernels.stencil2d import pick_block_rows
+from repro.kernels.stencil3d import pick_block_depth
+from repro.stencil.ips import TABLE_II
+
+
+def rows():
+    out = []
+    for name, ip in TABLE_II.items():
+        grid = jnp.ones(ip.grid_size, jnp.float32)
+        hw = jax.jit(resolve(ip.fn, "tpu"))
+        t1 = time_fn(hw, grid, warmup=1, iters=3)
+        if ip.ndim == 2:
+            h, w = ip.grid_size
+            blk = pick_block_rows(h, w)
+            tile_elems = (blk + 2) * w
+        else:
+            d, h, w = ip.grid_size
+            blk = pick_block_depth(d, h, w)
+            tile_elems = (blk + 2) * h * w
+        vmem_kb = tile_elems * 4 * 3 / 1024  # 3 live tile copies
+        ai = ip.flops_per_cell / 8.0
+        util = min(1.0, HBM_BW * ai / PEAK_FLOPS)
+        out.append((f"table3/{name}", t1 * 1e6,
+                    f"vmem={vmem_kb:.0f}KB;block={blk};AI={ai:.2f};"
+                    f"roofline_util={util:.4f}"))
+    return out
+
+
+def main():
+    emit(rows())
+
+
+if __name__ == "__main__":
+    main()

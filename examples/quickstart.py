@@ -1,0 +1,60 @@
+"""Quickstart — the paper's Listing 3, line for line.
+
+OpenMP (paper):                              This repo:
+
+  #pragma omp declare variant                  @declare_variant(base=do_laplace2d,
+      (do_laplace2d) match(device=vc709)                        match="tpu")
+  extern void hw_laplace2d(...);               def hw_laplace2d(v): ...
+
+  #pragma omp parallel / single                with TaskRegion(device="tpu") as tr:
+  for (i = 0; i < N; i++)                        for i in range(N):
+    #pragma omp target map(tofrom:V)               tr.target(do_laplace2d, V,
+        depend(in:deps[i])                               depend_in=[deps[i]],
+        depend(out:deps[i+1]) nowait                     depend_out=[deps[i+1]],
+    { do_laplace2d(&V,h,w); }                            map={"V": "tofrom"})
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import ClusterConfig, GraphExecutor, TaskRegion
+from repro.stencil.ips import do_laplace2d  # sw base; hw variant registered
+
+H, W, N = 64, 128, 48
+
+
+def main() -> None:
+    grid0 = np.random.RandomState(0).rand(H, W).astype(np.float32)
+
+    # six VC709 boards on a fiber ring, 4 IP slots each — conf.json analogue
+    cluster = ClusterConfig.paper_testbed()
+    executor = GraphExecutor(cluster=cluster)
+
+    with TaskRegion(device="tpu", executor=executor) as tr:
+        V = tr.buffer(grid0, "V")
+        deps = tr.dep_tokens("deps", N + 1)
+        for i in range(N):
+            tr.target(do_laplace2d, V,
+                      depend_in=[deps[i]], depend_out=[deps[i + 1]],
+                      map={"V": "tofrom"})
+    # region exit = the synchronization point: graph frozen, transfers
+    # elided, tasks mapped round-robin over the ring, chains fused.
+
+    log = tr.transfer_log
+    print(f"{N} pipeline tasks over {cluster.num_ips} IP slots "
+          f"({log.rounds} ring wraps)")
+    print(f"host transfers: {log.host_transfers}  (stock OpenMP: {2 * N})")
+    print(f"direct IP→IP transfers: {log.count('d2d')}, "
+          f"link bytes: {log.link_bytes:,}")
+    print(f"device dispatches: {log.dispatches} (chains fused)")
+
+    # the paper's verification flow: software run must agree
+    ref = grid0
+    for _ in range(N):
+        ref = np.asarray(do_laplace2d(ref))
+    np.testing.assert_allclose(V.value, ref, rtol=1e-5, atol=1e-6)
+    print("verified against the software (cpu) variant ✓")
+
+
+if __name__ == "__main__":
+    main()

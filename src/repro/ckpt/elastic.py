@@ -1,0 +1,46 @@
+"""Elastic restart: resume a run on a different mesh (grow/shrink after
+node failure or preemption).
+
+Checkpoints are mesh-agnostic (see checkpoint.py); what changes across a
+re-mesh is the *sharding plan*.  :func:`reshard_restore` recomputes the
+sharding rules for the new mesh and device_puts every leaf accordingly;
+:func:`plan_remesh` picks the biggest valid mesh from the surviving device
+count, preferring to shrink the data axis first (keeps TP groups intact —
+re-sharding TP would reshuffle far more bytes than dropping a DP replica).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+
+from repro.ckpt import checkpoint
+
+
+def plan_remesh(n_devices: int, tp: int = None, want_pods: int = 1,
+                tp_default: int = 16) -> tuple[tuple[int, ...], tuple[str, ...]]:
+    """Largest (pod, data, model) mesh shape fitting ``n_devices``."""
+    tp = tp or tp_default
+    while tp > 1 and n_devices % tp:
+        tp //= 2
+    rest = n_devices // tp
+    pods = want_pods
+    while pods > 1 and rest % pods:
+        pods -= 1
+    data = rest // pods
+    if pods > 1:
+        return (pods, data, tp), ("pod", "data", "model")
+    return (data, tp), ("data", "model")
+
+
+def reshard_restore(ckpt_dir: str, like: Any, mesh,
+                    sharding_fn: Callable[[Any, Any], Any],
+                    step: int | None = None):
+    """Restore ``like``-shaped state onto ``mesh``.
+
+    ``sharding_fn(like, mesh) -> pytree of NamedSharding`` is the same rules
+    engine used at cold start, evaluated against the *new* mesh, so the
+    restore is identical to a cold start + weight copy: no special cases.
+    """
+    shardings = sharding_fn(like, mesh)
+    return checkpoint.restore(ckpt_dir, like, step=step, shardings=shardings)

@@ -1,0 +1,49 @@
+"""Architecture registry: ``--arch <id>`` resolves here."""
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig
+
+from repro.configs.stablelm_12b import CONFIG as _stablelm
+from repro.configs.smollm_135m import CONFIG as _smollm
+from repro.configs.starcoder2_3b import CONFIG as _starcoder2
+from repro.configs.minitron_8b import CONFIG as _minitron
+from repro.configs.paligemma_3b import CONFIG as _paligemma
+from repro.configs.falcon_mamba_7b import CONFIG as _falcon_mamba
+from repro.configs.kimi_k2_1t_a32b import CONFIG as _kimi
+from repro.configs.arctic_480b import CONFIG as _arctic
+from repro.configs.zamba2_2p7b import CONFIG as _zamba2
+from repro.configs.seamless_m4t_large_v2 import CONFIG as _seamless
+
+ARCHS: dict[str, ModelConfig] = {
+    "stablelm-12b": _stablelm,
+    "smollm-135m": _smollm,
+    "starcoder2-3b": _starcoder2,
+    "minitron-8b": _minitron,
+    "paligemma-3b": _paligemma,
+    "falcon-mamba-7b": _falcon_mamba,
+    "kimi-k2-1t-a32b": _kimi,
+    "arctic-480b": _arctic,
+    "zamba2-2.7b": _zamba2,
+    "seamless-m4t-large-v2": _seamless,
+}
+
+
+def get_arch(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def cells(include_skipped: bool = False):
+    """All (arch, shape) assignment cells; long_500k × enc-dec is the one
+    skip (noted in DESIGN.md §5)."""
+    out = []
+    for aname, acfg in ARCHS.items():
+        for sname, scfg in SHAPES.items():
+            if (sname == "long_500k" and not acfg.supports_long_context
+                    and not include_skipped):
+                continue
+            out.append((aname, sname))
+    return out
+
+
+__all__ = ["ARCHS", "SHAPES", "ModelConfig", "ShapeConfig", "get_arch",
+           "cells"]

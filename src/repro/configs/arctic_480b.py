@@ -1,0 +1,19 @@
+"""arctic-480b — [moe] 35L d_model=7168 56H (GQA kv=8) d_ff=4864
+vocab=32000, MoE 128e top-2 + dense residual
+[hf:Snowflake/snowflake-arctic-base; hf].
+
+Arctic's Dense-MoE hybrid: every layer has a parallel dense FFN residual
+next to the 128-expert top-2 MoE — modeled as num_shared_experts=1 with
+the same 4864 hidden.  56 heads don't divide 16 → attention replicated
+over TP, experts sharded (128/16 = 8)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b", family="moe",
+    num_layers=35, d_model=7168, num_heads=56, num_kv_heads=8,
+    d_ff=4864, vocab_size=32000, head_dim=128,
+    num_experts=128, experts_per_tok=2, moe_d_ff=4864,
+    num_shared_experts=1, capacity_factor=1.25,
+    activation="silu_glu", optimizer="adafactor",
+    fsdp_axes=("pod", "data"),
+)

@@ -1,0 +1,144 @@
+"""Model/config schema shared by all assigned architectures.
+
+One frozen dataclass describes any of the supported families:
+dense / moe / ssm (mamba) / hybrid (mamba2+shared-attn) / vlm / audio
+(enc-dec).  Field semantics follow the assignment table; family-specific
+fields are zero/None when unused.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0              # 0 → d_model // num_heads
+
+    # MLP shape
+    activation: str = "silu_glu"   # silu_glu | gelu | relu2
+
+    # MoE
+    num_experts: int = 0
+    experts_per_tok: int = 0
+    moe_d_ff: int = 0              # per-expert hidden (0 → d_ff)
+    num_shared_experts: int = 0    # dense residual path (arctic) / shared (kimi)
+    capacity_factor: float = 1.25
+
+    # SSM (mamba)
+    ssm_state: int = 0
+    ssm_version: int = 1           # 1 = mamba1 (falcon), 2 = mamba2 (zamba2)
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_head_dim: int = 64         # mamba2 only
+
+    # hybrid (zamba2): shared attention block applied after every k-th layer
+    attn_every: int = 0
+
+    # encoder-decoder (audio family)
+    num_encoder_layers: int = 0
+
+    # modality frontend STUB: number of precomputed prefix embeddings
+    frontend: str | None = None    # None | "patch" (vlm) | "frames" (audio)
+    num_prefix_tokens: int = 0
+
+    # training
+    optimizer: str = "adamw"       # adamw | adafactor (≥100B configs)
+
+    # numerics / misc
+    dtype: str = "bfloat16"
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    remat: str = "block"           # none | block — activation checkpointing
+
+    # distribution hints (overridable per shape at launch)
+    fsdp_axes: tuple[str, ...] = ("data",)   # param-shard axes (ZeRO-3)
+    tp_enabled: bool = True                  # False → no tensor parallelism
+    dp_over_model: bool = False              # batch also over the model axis
+                                             # (pure-DP/ZeRO-3 mesh use)
+
+    def __post_init__(self):
+        assert self.family in ("dense", "moe", "ssm", "hybrid", "vlm", "audio")
+        if self.num_heads:
+            assert self.num_heads % max(self.num_kv_heads, 1) == 0
+
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // self.num_heads
+
+    @property
+    def d_inner(self) -> int:      # mamba inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def is_encoder_decoder(self) -> bool:
+        return self.num_encoder_layers > 0
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def supports_long_context(self) -> bool:
+        """Whether long_500k decode is runnable (see DESIGN.md §5):
+        SSM/hybrid natively; dense/moe/vlm via seq-sharded decode cache;
+        enc-dec is skipped."""
+        return not self.is_encoder_decoder
+
+    def reduced(self, **overrides) -> "ModelConfig":
+        """A tiny same-family config for CPU smoke tests."""
+        small = dict(
+            num_layers=min(self.num_layers, 2),
+            d_model=64,
+            num_heads=4 if self.num_heads else 0,
+            num_kv_heads=(min(self.num_kv_heads, 2) if self.num_kv_heads else 0),
+            head_dim=16 if self.num_heads else 0,
+            d_ff=128,
+            vocab_size=256,
+            num_experts=min(self.num_experts, 8),
+            experts_per_tok=min(self.experts_per_tok, 2),
+            moe_d_ff=32 if self.num_experts else 0,
+            num_shared_experts=min(self.num_shared_experts, 1),
+            ssm_state=min(self.ssm_state, 8),
+            ssm_head_dim=16 if self.ssm_version == 2 else self.ssm_head_dim,
+            attn_every=2 if self.attn_every else 0,
+            num_encoder_layers=min(self.num_encoder_layers, 2),
+            num_prefix_tokens=8 if self.num_prefix_tokens else 0,
+            dtype="float32",
+            remat="none",
+            fsdp_axes=(),
+        )
+        small.update(overrides)
+        return dataclasses.replace(self, **small)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One input-shape cell from the assignment."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str        # train | prefill | decode
+
+    @property
+    def lowers(self) -> str:
+        return "train_step" if self.kind == "train" else "serve_step"
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}

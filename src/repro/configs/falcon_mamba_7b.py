@@ -1,0 +1,12 @@
+"""falcon-mamba-7b — [ssm] 64L d_model=4096 (attn-free) vocab=65024,
+ssm_state=16 — mamba1 arch [arXiv:2410.05355; unverified].
+expand=2 → d_inner=8192, dt_rank=256, conv=4."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="falcon-mamba-7b", family="ssm",
+    num_layers=64, d_model=4096, num_heads=0, num_kv_heads=0,
+    d_ff=0, vocab_size=65024,
+    ssm_state=16, ssm_version=1, ssm_expand=2, ssm_conv=4,
+    fsdp_axes=("pod", "data"),
+)

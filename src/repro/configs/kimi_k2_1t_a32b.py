@@ -1,0 +1,19 @@
+"""kimi-k2-1t-a32b — [moe] 61L d_model=7168 64H (GQA kv=8) d_ff=2048
+vocab=163840, MoE 384e top-8 — trillion-param MoE (paper-table)
+[arXiv:2501.kimi2; unverified].
+
+DeepSeek-V3-lineage: 384 routed experts (top-8) + 1 shared expert of the
+same 2048 hidden per layer.  Adafactor optimizer (AdamW state would not
+fit 512×16 GB even fully sharded); params FSDP over (pod,data) and
+experts over the model axis (384/16 = 24 per shard)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t-a32b", family="moe",
+    num_layers=61, d_model=7168, num_heads=64, num_kv_heads=8,
+    d_ff=2048, vocab_size=163840, head_dim=112,
+    num_experts=384, experts_per_tok=8, moe_d_ff=2048,
+    num_shared_experts=1, capacity_factor=1.25,
+    activation="silu_glu", optimizer="adafactor",
+    fsdp_axes=("pod", "data"),
+)

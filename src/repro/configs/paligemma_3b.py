@@ -1,0 +1,16 @@
+"""paligemma-3b — [vlm] 18L d_model=2048 8H (GQA kv=1) d_ff=16384
+vocab=257216 — SigLIP + gemma [arXiv:2407.07726; hf].
+
+The SigLIP vision tower is a STUB per the assignment: input_specs()
+provides 256 precomputed patch embeddings; the gemma decoder (prefix-LM
+attention over the image prefix) is real. Gemma uses GeGLU."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="paligemma-3b", family="vlm",
+    num_layers=18, d_model=2048, num_heads=8, num_kv_heads=1,
+    d_ff=16384, vocab_size=257216, head_dim=256,
+    activation="gelu_glu", rope_theta=10000.0,
+    frontend="patch", num_prefix_tokens=256,
+    fsdp_axes=("data",),
+)

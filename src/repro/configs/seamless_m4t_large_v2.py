@@ -1,0 +1,17 @@
+"""seamless-m4t-large-v2 — [audio] 24L d_model=1024 16H (kv=16)
+d_ff=8192 vocab=256206 — enc-dec, multimodal [arXiv:2308.11596; hf].
+
+24 encoder + 24 decoder layers; the speech frontend is a STUB
+(input_specs() provides precomputed frame embeddings for the encoder).
+vocab 256206 is not divisible by a 16-way model axis → embedding
+replicated over TP (sharding rules fall back), FSDP over data.
+long_500k is SKIPPED for this arch (enc-dec; see DESIGN.md §5)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2", family="audio",
+    num_layers=24, d_model=1024, num_heads=16, num_kv_heads=16,
+    d_ff=8192, vocab_size=256206, head_dim=64,
+    num_encoder_layers=24, frontend="frames",
+    activation="gelu", fsdp_axes=("data",),
+)

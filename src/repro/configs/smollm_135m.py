@@ -1,0 +1,14 @@
+"""smollm-135m — [dense] 30L d_model=576 9H (GQA kv=3) d_ff=1536
+vocab=49152 — llama-arch small [hf:HuggingFaceTB/SmolLM-135M; hf].
+
+9 heads / 3 kv heads do not divide a 16-way model axis → the sharding
+rules replicate attention over TP and shard only the MLP/vocab dims."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="smollm-135m", family="dense",
+    num_layers=30, d_model=576, num_heads=9, num_kv_heads=3,
+    d_ff=1536, vocab_size=49152, head_dim=64,
+    activation="silu_glu", rope_theta=10000.0,
+    fsdp_axes=("data",),
+)

@@ -1,0 +1,11 @@
+"""starcoder2-3b — [dense] 30L d_model=3072 24H (GQA kv=2) d_ff=12288
+vocab=49152 — GQA, RoPE [arXiv:2402.19173; hf]. Plain-GELU MLP (no GLU)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-3b", family="dense",
+    num_layers=30, d_model=3072, num_heads=24, num_kv_heads=2,
+    d_ff=12288, vocab_size=49152, head_dim=128,
+    activation="gelu", rope_theta=100000.0,
+    fsdp_axes=("data",),
+)

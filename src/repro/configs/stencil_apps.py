@@ -1,0 +1,13 @@
+"""Paper Table II — the stencil application setups (grid size, iteration
+count, IPs per FPGA) as launchable configs. The IP implementations and the
+catalogue live in :mod:`repro.stencil.ips`; this module is the config-side
+entry point referenced by DESIGN.md §8."""
+from repro.stencil.ips import PAPER_ITERATIONS, TABLE_II, StencilIP
+
+__all__ = ["TABLE_II", "PAPER_ITERATIONS", "StencilIP"]
+
+
+def get_stencil_app(name: str) -> StencilIP:
+    if name not in TABLE_II:
+        raise KeyError(f"unknown stencil app {name!r}; have {sorted(TABLE_II)}")
+    return TABLE_II[name]

@@ -1,0 +1,17 @@
+"""zamba2-2.7b — [hybrid] 54L d_model=2560 32H (kv=32, full MHA)
+d_ff=10240 vocab=32000, ssm_state=64 — Mamba2 + shared attn blocks
+[arXiv:2411.15242; hf].
+
+54 mamba2 layers in 9 groups of 6; ONE shared attention+MLP block
+(single weight set) applied after every 6th layer — Zamba's
+parameter-sharing scheme.  d_inner=5120, 80 heads × 64."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-2.7b", family="hybrid",
+    num_layers=54, d_model=2560, num_heads=32, num_kv_heads=32,
+    d_ff=10240, vocab_size=32000, head_dim=80,
+    ssm_state=64, ssm_version=2, ssm_expand=2, ssm_conv=4,
+    ssm_head_dim=64, attn_every=6,
+    activation="gelu", fsdp_axes=("data",),
+)

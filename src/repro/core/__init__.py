@@ -1,0 +1,32 @@
+"""Core task-offloading runtime — the paper's contribution, JAX-native.
+
+Public surface:
+
+* :class:`TaskRegion` / :class:`TaskGraph` — OpenMP-style deferred task graph
+  (``depend`` / ``map`` clause semantics, synchronization at region exit);
+* :func:`declare_variant` / :func:`resolve` — ``#pragma omp declare variant``;
+* :class:`ClusterConfig` — the ``conf.json`` topology;
+* :class:`GraphExecutor` + device plugins — libomptarget analogue;
+* :func:`ring_pipeline` — iteration-parallel ring pipelining (shard_map).
+"""
+from repro.core.elision import elision_report, plan_deferred, plan_eager
+from repro.core.executor import GraphExecutor, TransferLog
+from repro.core.mapper import chain_affine_map, round_robin_map
+from repro.core.pipeline import (pipeline_bubble_fraction, reference_pipeline,
+                                 ring_pipeline)
+from repro.core.plugin import (CPUDevice, DevicePlugin, InterpretDevice,
+                               MeshDevice)
+from repro.core.taskgraph import (Buffer, DepToken, MapClause, Task,
+                                  TaskGraph, TaskRegion)
+from repro.core.topology import ClusterConfig, IPSlot
+from repro.core.variant import call_variant, declare_variant, resolve
+
+__all__ = [
+    "TaskRegion", "TaskGraph", "Task", "Buffer", "DepToken", "MapClause",
+    "ClusterConfig", "IPSlot", "GraphExecutor", "TransferLog",
+    "CPUDevice", "InterpretDevice", "MeshDevice", "DevicePlugin",
+    "declare_variant", "resolve", "call_variant",
+    "round_robin_map", "chain_affine_map",
+    "ring_pipeline", "reference_pipeline", "pipeline_bubble_fraction",
+    "plan_eager", "plan_deferred", "elision_report",
+]

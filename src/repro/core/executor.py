@@ -1,0 +1,236 @@
+"""Graph executor — deferred dispatch, elision, mapping, fused chains.
+
+Realizes the paper's runtime (§III-A): at the synchronization point the
+frozen :class:`TaskGraph` is (1) transfer-planned (:mod:`elision`), (2)
+mapped to IP slots (:mod:`mapper`), (3) scheduled as fused chains (the
+direct IP→IP pipelines) and executed through a device plugin, logging every
+realized transfer so the elision claim is measurable.
+
+Task function convention (JAX is immutable, OpenMP mutates pointers): a task
+function receives buffer *values* in place of :class:`Buffer` args and
+returns the new value of its written buffers — one value if it writes one
+buffer, a tuple in map-clause order if several, ``None`` if read-only.
+
+Racy programs (tasks touching a buffer with no ordering tokens) keep their
+OpenMP semantics: some valid interleaving is realized.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+from repro.core import elision
+from repro.core.mapper import POLICIES, Mapping
+from repro.core.plugin import CPUDevice, DevicePlugin, default_plugin
+from repro.core.taskgraph import Buffer, Task, TaskGraph
+from repro.core.topology import ClusterConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class LogRecord:
+    kind: str            # h2d | d2h | d2d
+    buffer_name: str
+    nbytes: int          # payload bytes
+    wire_bytes: int      # payload + framing (d2d) — what the link carries
+    hops: int            # inter-board links crossed (d2d only)
+    src_tid: int | None
+    dst_tid: int | None
+
+
+@dataclasses.dataclass
+class TransferLog:
+    records: list[LogRecord] = dataclasses.field(default_factory=list)
+    dispatches: int = 0          # device dispatch calls (chain fusion ⇒ fewer)
+    fused_chains: int = 0
+    rounds: int = 0              # ring wrap-arounds (A-SWT IP reuse)
+
+    def count(self, kind: str) -> int:
+        return sum(1 for r in self.records if r.kind == kind)
+
+    def bytes_of(self, kind: str) -> int:
+        return sum(r.nbytes for r in self.records if r.kind == kind)
+
+    @property
+    def host_transfers(self) -> int:
+        return self.count(elision.H2D) + self.count(elision.D2H)
+
+    @property
+    def host_bytes(self) -> int:
+        return self.bytes_of(elision.H2D) + self.bytes_of(elision.D2H)
+
+    @property
+    def link_bytes(self) -> int:
+        """Total bytes crossing inter-board links (wire, × hops)."""
+        return sum(r.wire_bytes * r.hops for r in self.records
+                   if r.kind == elision.D2D)
+
+    def summary(self) -> dict[str, int]:
+        return {
+            "h2d": self.count(elision.H2D), "d2h": self.count(elision.D2H),
+            "d2d": self.count(elision.D2D),
+            "host_bytes": self.host_bytes, "link_bytes": self.link_bytes,
+            "dispatches": self.dispatches, "fused_chains": self.fused_chains,
+            "rounds": self.rounds,
+        }
+
+
+class GraphExecutor:
+    """Host-side orchestrator (control thread + plugin, in one object)."""
+
+    def __init__(self, cluster: ClusterConfig | None = None,
+                 plugins: dict[str | None, DevicePlugin] | None = None,
+                 policy: str = "round_robin", fuse_chains: bool = True):
+        self.cluster = cluster or ClusterConfig.paper_testbed()
+        self.policy = policy
+        self.fuse_chains = fuse_chains
+        self._plugins: dict[str | None, DevicePlugin] = plugins or {}
+        self._plugins.setdefault(None, CPUDevice())
+
+    def plugin_for(self, device: str | None) -> DevicePlugin:
+        if device not in self._plugins:
+            self._plugins[device] = default_plugin(device)
+        return self._plugins[device]
+
+    # ------------------------------------------------------------------
+    def execute(self, graph: TaskGraph, defer: bool = True) -> TransferLog:
+        plan = (elision.plan_deferred if defer else elision.plan_eager)(graph)
+        mapping: Mapping = POLICIES[self.policy](graph, self.cluster)
+        log = TransferLog(rounds=mapping.rounds())
+        dev: dict[int, Any] = {}  # id(buffer) -> device-resident value
+
+        units = self._schedule_units(graph, defer)
+        for unit in units:
+            for tid in unit:
+                self._realize(plan.before_task.get(tid, ()), graph, mapping,
+                              dev, log)
+            self._run_unit(graph, unit, dev, log)
+            for tid in unit:
+                self._realize(plan.after_task.get(tid, ()), graph, mapping,
+                              dev, log)
+        return log
+
+    # -- scheduling -----------------------------------------------------
+    def _schedule_units(self, graph: TaskGraph, defer: bool) -> list[list[int]]:
+        if not (defer and self.fuse_chains):
+            return [[tid] for tid in graph.order]
+        units: list[list[int]] = []
+        for chain in graph.chains():
+            if len(chain) > 1 and graph.task(chain[0]).is_target:
+                units.append(chain)
+            else:
+                units.extend([t] for t in chain)
+        # chains() yields chains in topo order of their heads and interleaved
+        # units must respect cross-chain edges: re-sort units by the topo
+        # position of their first task (safe: a chain is contiguous in the
+        # dependence order of the tasks it contains).
+        pos = {tid: i for i, tid in enumerate(graph.order)}
+        units.sort(key=lambda u: pos[u[0]])
+        return units
+
+    # -- transfer realization --------------------------------------------
+    def _realize(self, transfers, graph: TaskGraph, mapping: Mapping,
+                 dev: dict[int, Any], log: TransferLog) -> None:
+        for tr in transfers:
+            buf: Buffer = tr.buffer
+            if tr.kind == elision.H2D:
+                plugin = self.plugin_for(graph.task(tr.dst_tid).device)
+                dev[id(buf)] = plugin.data_submit(buf.value)
+                log.records.append(LogRecord(tr.kind, buf.name, buf.nbytes,
+                                             buf.nbytes, 0, None, tr.dst_tid))
+            elif tr.kind == elision.D2H:
+                src_dev = (graph.task(tr.src_tid).device
+                           if tr.src_tid is not None else None)
+                plugin = self.plugin_for(src_dev)
+                if id(buf) in dev:
+                    buf._host_write(plugin.data_retrieve(dev[id(buf)]))
+                log.records.append(LogRecord(tr.kind, buf.name, buf.nbytes,
+                                             buf.nbytes, 0, tr.src_tid, None))
+            else:  # D2D over the ring
+                plugin = self.plugin_for(graph.task(tr.dst_tid).device)
+                hops = 0
+                a, b = mapping.slot(tr.src_tid), mapping.slot(tr.dst_tid)
+                if a is not None and b is not None:
+                    hops = mapping.cluster.hop_distance(a, b)
+                if id(buf) in dev:
+                    dev[id(buf)] = plugin.link_transfer(dev[id(buf)], hops)
+                wire = plugin.frames.wire_bytes(buf.nbytes) if hops else buf.nbytes
+                log.records.append(LogRecord(tr.kind, buf.name, buf.nbytes,
+                                             wire, hops, tr.src_tid, tr.dst_tid))
+
+    # -- execution --------------------------------------------------------
+    def _task_values(self, t: Task, dev: dict[int, Any]) -> tuple:
+        vals = []
+        for a in t.args:
+            if isinstance(a, Buffer):
+                if t.is_target:
+                    vals.append(dev[id(a)] if id(a) in dev else a.value)
+                else:
+                    vals.append(a.value)
+            else:
+                vals.append(a)
+        return tuple(vals)
+
+    @staticmethod
+    def _written(t: Task) -> list[Buffer]:
+        return [m.buffer for m in t.maps if m.maps_from_device]
+
+    def _store_outputs(self, t: Task, out: Any, dev: dict[int, Any]) -> None:
+        written = self._written(t)
+        if not written:
+            return
+        outs = out if isinstance(out, tuple) and len(written) > 1 else (out,)
+        if len(outs) != len(written):
+            raise ValueError(
+                f"{t} writes {len(written)} buffers but returned {len(outs)}")
+        for buf, val in zip(written, outs):
+            if t.is_target:
+                dev[id(buf)] = val
+            else:
+                buf._host_write(val)
+
+    def _run_unit(self, graph: TaskGraph, unit: list[int],
+                  dev: dict[int, Any], log: TransferLog) -> None:
+        if len(unit) == 1:
+            t = graph.task(unit[0])
+            plugin = self.plugin_for(t.device)
+            out = plugin.run_task(t.fn, self._task_values(t, dev), t.kwargs)
+            self._store_outputs(t, out, dev)
+            log.dispatches += 1
+            return
+        # fused chain: build env-threading steps and hand to the plugin
+        tasks = [graph.task(tid) for tid in unit]
+        plugin = self.plugin_for(tasks[0].device)
+        env_bufs: list[Buffer] = []
+        seen: set[int] = set()
+        for t in tasks:
+            for b in t.buffers():
+                if id(b) not in seen:
+                    seen.add(id(b))
+                    env_bufs.append(b)
+        index = {id(b): i for i, b in enumerate(env_bufs)}
+
+        def make_step(t: Task) -> Callable[[tuple], tuple]:
+            written = self._written(t)
+            resolved = plugin.resolve(t.fn)
+
+            def step(env: tuple) -> tuple:
+                vals = tuple(env[index[id(a)]] if isinstance(a, Buffer) else a
+                             for a in t.args)
+                out = resolved(*vals, **t.kwargs)
+                if not written:
+                    return env
+                outs = (out if isinstance(out, tuple) and len(written) > 1
+                        else (out,))
+                new_env = list(env)
+                for buf, val in zip(written, outs):
+                    new_env[index[id(buf)]] = val
+                return tuple(new_env)
+
+            return step
+
+        env0 = tuple(dev[id(b)] if id(b) in dev else b.value for b in env_bufs)
+        env = plugin.run_chain([make_step(t) for t in tasks], env0)
+        for b in env_bufs:
+            dev[id(b)] = env[index[id(b)]]
+        log.dispatches += 1
+        log.fused_chains += 1

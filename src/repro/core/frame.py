@@ -1,0 +1,51 @@
+"""MAC-Frame-Handler analogue: payload framing + halo packing.
+
+The paper's MFH packs IP payloads into MAC frames (destination, source,
+type/length, payload) before they cross the optical ring.  On TPU the
+address fields are compile-time routing (the XLA partitioner), but two real
+jobs remain and live here:
+
+* **accounting** — per-link byte counts including framing overhead, used by
+  the transfer log and the roofline collective term;
+* **halo packing** — stencil stages exchange boundary slabs; packing them
+  into one contiguous payload per neighbor is the TPU-shaped version of
+  "assemble one MAC frame per transfer" (fewer, larger ``ppermute`` s).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+ETH_HEADER_BYTES = 14          # dst(6) + src(6) + type/len(2)
+DEFAULT_MTU = 9000             # jumbo frames on the 10G links
+
+
+@dataclasses.dataclass(frozen=True)
+class FrameSpec:
+    mtu: int = DEFAULT_MTU
+    header_bytes: int = ETH_HEADER_BYTES
+
+    def num_frames(self, payload_bytes: int) -> int:
+        if payload_bytes <= 0:
+            return 0
+        return -(-payload_bytes // self.mtu)
+
+    def wire_bytes(self, payload_bytes: int) -> int:
+        """Payload + per-frame header overhead actually put on the link."""
+        return payload_bytes + self.num_frames(payload_bytes) * self.header_bytes
+
+
+def pack_halo(block: jnp.ndarray, halo: int, axis: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Boundary slabs (lo, hi) of width ``halo`` along ``axis`` — one payload
+    per ring neighbor."""
+    lo = jnp.take(block, jnp.arange(halo), axis=axis)
+    n = block.shape[axis]
+    hi = jnp.take(block, jnp.arange(n - halo, n), axis=axis)
+    return lo, hi
+
+
+def attach_halo(block: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray,
+                axis: int) -> jnp.ndarray:
+    """Concatenate received neighbor slabs around a local block."""
+    return jnp.concatenate([lo, block, hi], axis=axis)

@@ -1,0 +1,81 @@
+"""Task → IP mapping — the paper's round-robin, closest-to-host-first policy.
+
+§III-A: *"As in our experiments, the FPGAs are connected in a ring topology,
+a round-robin algorithm is used to map tasks to IPs. Each task is mapped in a
+circular order to the free IP that is closest to the host computer."*
+
+The mapper works on the frozen :class:`TaskGraph`.  Host tasks stay on the
+host; target tasks are assigned IP slots in topological order, wrapping
+around the ring when the task count exceeds the slot count (the paper reuses
+IPs through the A-SWT switch — 240 iterations over ≤24 IPs).
+
+The mapping quality metric is total hop distance of dependence edges: a chain
+mapped to consecutive ring slots pays 0–1 hops per edge, which is why the
+round-robin-in-topological-order policy produces the paper's deep pipelines.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.taskgraph import TaskGraph
+from repro.core.topology import ClusterConfig, IPSlot
+
+
+@dataclasses.dataclass
+class Mapping:
+    assignment: dict[int, IPSlot]   # tid -> slot (target tasks only)
+    cluster: ClusterConfig
+
+    def slot(self, tid: int) -> IPSlot | None:
+        return self.assignment.get(tid)
+
+    def rounds(self) -> int:
+        """How many times the ring is wrapped (A-SWT reuse count)."""
+        if not self.assignment:
+            return 0
+        return -(-len(self.assignment) // self.cluster.num_ips)
+
+    def edge_hops(self, graph: TaskGraph) -> int:
+        """Total inter-board hops across all mapped dependence edges."""
+        total = 0
+        for e in graph.edges:
+            a, b = self.assignment.get(e.src), self.assignment.get(e.dst)
+            if a is not None and b is not None:
+                total += self.cluster.hop_distance(a, b)
+        return total
+
+
+def round_robin_map(graph: TaskGraph, cluster: ClusterConfig) -> Mapping:
+    """The paper's policy: circular order over ring slots, closest first."""
+    ring = list(cluster.ring_order())
+    assignment: dict[int, IPSlot] = {}
+    nxt = 0
+    for tid in graph.order:
+        if not graph.task(tid).is_target:
+            continue
+        assignment[tid] = ring[nxt % len(ring)]
+        nxt += 1
+    return Mapping(assignment=assignment, cluster=cluster)
+
+
+def chain_affine_map(graph: TaskGraph, cluster: ClusterConfig) -> Mapping:
+    """Beyond-paper alternative: map whole chains to contiguous slots.
+
+    Identical to round-robin for a single pipeline (the paper's case), but
+    for graphs with several independent chains it keeps each chain contiguous
+    on the ring instead of interleaving them, reducing edge hops.  Used by
+    the hillclimb; the default executor policy remains the paper's.
+    """
+    ring = list(cluster.ring_order())
+    assignment: dict[int, IPSlot] = {}
+    nxt = 0
+    for chain in graph.chains(contiguous=False):
+        for tid in chain:
+            if not graph.task(tid).is_target:
+                continue
+            assignment[tid] = ring[nxt % len(ring)]
+            nxt += 1
+    return Mapping(assignment=assignment, cluster=cluster)
+
+
+POLICIES = {"round_robin": round_robin_map, "chain_affine": chain_affine_map}

@@ -1,0 +1,155 @@
+"""Ring-pipeline executor — iteration parallelism on a device ring.
+
+The paper chains IPs so that each computes one stencil iteration while the
+grid streams board-to-board over the optical ring; the A-SWT switch lets the
+grid wrap around for more iterations than physical IPs (§IV, Figs. 8/9).
+
+TPU adaptation: stages are devices along a mesh axis, the optical links are
+``lax.ppermute`` hops, and the stream is a GPipe-style microbatch rotation
+(software pipelining replaces AXIS backpressure — see DESIGN.md §2).  One
+pass of :func:`ring_pipeline` is one traversal of the ring;
+:func:`multi_round_pipeline` wraps the ring R times (the A-SWT reuse), with
+the wrap realized as the physical last→first ring hop.
+
+Used by the stencil driver (grid tiles as microbatches) and by LM pipeline
+parallelism (layer groups as stages, batch microbatches as the stream).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax import shard_map
+
+
+def _squeeze0(tree: Any) -> Any:
+    return jax.tree.map(lambda a: a[0], tree)
+
+
+def _select(pred, a, b):
+    return jax.tree.map(lambda x, y: jnp.where(pred, x, y), a, b)
+
+
+def reference_pipeline(stage_fn: Callable, stage_params: Any,
+                       microbatches: Any, num_stages: int,
+                       rounds: int = 1) -> Any:
+    """Sequential oracle: every microbatch through every stage in order.
+
+    ``stage_params`` leading dims ``[rounds, S, ...]`` or ``[S, ...]``.
+    """
+    if rounds == 1 and jax.tree.leaves(stage_params)[0].shape[0] == num_stages:
+        stage_params = jax.tree.map(lambda a: a[None], stage_params)
+
+    def one(x):
+        for r in range(rounds):
+            for s in range(num_stages):
+                x = stage_fn(jax.tree.map(lambda a: a[r, s], stage_params), x)
+        return x
+
+    num_micro = jax.tree.leaves(microbatches)[0].shape[0]
+    outs = [one(jax.tree.map(lambda a: a[m], microbatches))
+            for m in range(num_micro)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+
+
+def _pipeline_pass(stage_fn: Callable, axis: str, num_stages: int,
+                   num_micro: int, params_local: Any, x_stack: Any) -> Any:
+    """One ring traversal, executed per-device inside shard_map.
+
+    ``params_local``: this stage's params (leading stage dim squeezed away).
+    ``x_stack``: [M, ...] input microbatches (read by stage 0 only).
+    Returns [M, ...] outputs, valid on the LAST stage.
+    """
+    stage = jax.lax.axis_index(axis)
+    zero_mb = jax.tree.map(lambda a: jnp.zeros_like(a[0]), x_stack)
+    out_stack0 = jax.tree.map(lambda a: jnp.zeros_like(a), x_stack)
+    perm = [(i, (i + 1) % num_stages) for i in range(num_stages)]
+
+    def step(carry, t):
+        buf, out_stack = carry
+        # stage 0 ingests microbatch t from the stream; others take the buf
+        # handed to them over the ring link.
+        idx = jnp.clip(t, 0, num_micro - 1)
+        x_in = _select(stage == 0,
+                       jax.tree.map(lambda a: a[idx], x_stack), buf)
+        y = stage_fn(params_local, x_in)
+        # a microbatch is finished when the last stage computes at a valid slot
+        is_last = stage == num_stages - 1
+        valid = (t >= stage) & (t - stage < num_micro)
+        out_idx = jnp.clip(t - (num_stages - 1), 0, num_micro - 1)
+        out_stack = jax.tree.map(
+            lambda os, yv: jnp.where(
+                is_last & valid,
+                jax.lax.dynamic_update_index_in_dim(os, yv, out_idx, 0), os),
+            out_stack, y)
+        # rotate: every stage hands its output to its ring successor
+        buf_next = (jax.lax.ppermute(y, axis, perm)
+                    if num_stages > 1 else y)
+        return (buf_next, out_stack), None
+
+    total = num_micro + num_stages - 1
+    (_, out_stack), _ = jax.lax.scan(
+        step, (zero_mb, out_stack0), jnp.arange(total))
+    return out_stack
+
+
+def ring_pipeline(stage_fn: Callable, stage_params: Any, microbatches: Any,
+                  mesh: Mesh, axis: str = "stage",
+                  rounds: int = 1) -> Any:
+    """Run M microbatches through S stages (× ``rounds`` ring wraps).
+
+    stage_fn: ``(params, x) -> y`` with matching x/y pytree structure.
+    stage_params: pytree, leading dims ``[rounds, S, ...]`` (or ``[S, ...]``
+        when rounds == 1) — stage dim sharded over ``axis``.
+    microbatches: pytree, leading dim M, replicated.
+    Returns microbatch outputs ``[M, ...]`` replicated across the mesh.
+    """
+    num_stages = mesh.shape[axis]
+    num_micro = jax.tree.leaves(microbatches)[0].shape[0]
+    if rounds == 1 and jax.tree.leaves(stage_params)[0].shape[0] == num_stages:
+        stage_params = jax.tree.map(lambda a: a[None], stage_params)
+
+    pspec_params = P(None, axis)   # [rounds, S, ...]
+    pspec_x = P()                  # replicated stream
+
+    def body(params_rs, x_stack):
+        params_r = _squeeze0(jax.tree.map(lambda a: jnp.swapaxes(a, 0, 1),
+                                          params_rs))  # [rounds, ...] local
+        stage = jax.lax.axis_index(axis)
+        wrap = ([(num_stages - 1, 0)] if num_stages > 1 else None)
+
+        def round_step(x_stack, params_one):
+            out = _pipeline_pass(stage_fn, axis, num_stages, num_micro,
+                                 params_one, x_stack)
+            # ring wrap: finished stack moves last→first for the next round
+            if wrap is not None:
+                out = jax.lax.ppermute(out, axis, wrap)
+            return out, None
+
+        x_final, _ = jax.lax.scan(round_step, x_stack, params_r)
+        # after the last wrap the result sits on stage 0; broadcast it
+        src = 0 if num_stages > 1 else 0
+        keep = stage == src
+        masked = jax.tree.map(
+            lambda a: jnp.where(keep, a, jnp.zeros_like(a)), x_final)
+        return jax.tree.map(
+            lambda a: jax.lax.psum(a, axis) if num_stages > 1 else a, masked)
+
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(pspec_params, pspec_x), out_specs=pspec_x,
+                   check_vma=False)
+    return fn(stage_params, microbatches)
+
+
+def pipeline_bubble_fraction(num_stages: int, num_micro: int,
+                             rounds: int = 1) -> float:
+    """Idle fraction of the GPipe schedule — the napkin number the perf log
+    uses when choosing microbatch counts: (S-1) / (M + S - 1) per pass."""
+    per_pass = (num_stages - 1) / (num_micro + num_stages - 1)
+    return per_pass  # rounds share the same per-pass bubble
+
+
+__all__ = ["ring_pipeline", "reference_pipeline", "pipeline_bubble_fraction"]

@@ -1,0 +1,342 @@
+"""OpenMP-style deferred task graph — depend/map clause semantics in Python.
+
+This reimplements, in a JAX-native embedding, the OpenMP task machinery the
+paper builds on (Listing 3):
+
+.. code-block:: c
+
+    #pragma omp target map(tofrom:V[:(h*w)])             \\
+                       depend(in:deps[i]) depend(out:deps[i+1]) nowait
+    { do_laplace2d(&V, h, w); }
+
+and the paper's key runtime change (§III-A, "Managing the Task Graph"):
+tasks are *not* dispatched as their dependencies resolve; instead the whole
+graph is built first and only consumed at the synchronization point at the
+end of the ``single`` scope.  Knowing the full graph lets the runtime elide
+host round-trips between device tasks (see :mod:`repro.core.elision`).
+
+Python embedding::
+
+    with TaskRegion(cluster, device="vc709") as tr:
+        V = tr.buffer(grid, "V")
+        deps = tr.dep_tokens("deps", n + 1)
+        for i in range(n):
+            tr.target(do_laplace2d, V, depend_in=[deps[i]],
+                      depend_out=[deps[i + 1]], map={"V": "tofrom"})
+    out = V.value          # region exit == OpenMP taskwait; graph has run
+
+``tr.target`` is ``#pragma omp target ... nowait`` — it *records* a task and
+returns immediately.  The region exit is the synchronization point.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+MAP_DIRECTIONS = ("to", "from", "tofrom", "alloc")
+
+_UNSET = object()  # distinguishes "device not given" from "explicitly host"
+
+
+@dataclasses.dataclass(frozen=True)
+class DepToken:
+    """A dependence variable, e.g. one element of the paper's ``deps[]``."""
+
+    name: str
+    index: int
+
+    def __repr__(self) -> str:
+        return f"{self.name}[{self.index}]"
+
+
+class Buffer:
+    """A host buffer mapped to/from devices via ``map`` clauses.
+
+    ``.value`` is host memory; the executor tracks device residency
+    separately and writes back per the (elided) transfer plan.
+    """
+
+    def __init__(self, value: Any, name: str):
+        self._value = value
+        self.name = name
+        self.version = 0  # bumped on each host write-back
+
+    @property
+    def value(self) -> Any:
+        return self._value
+
+    def _host_write(self, value: Any) -> None:
+        self._value = value
+        self.version += 1
+
+    @property
+    def nbytes(self) -> int:
+        v = np.asarray(self._value)
+        return int(v.size * v.dtype.itemsize)
+
+    def __repr__(self) -> str:
+        return f"Buffer({self.name}, v{self.version})"
+
+
+@dataclasses.dataclass(frozen=True)
+class MapClause:
+    buffer: Buffer
+    direction: str  # to | from | tofrom | alloc
+
+    def __post_init__(self) -> None:
+        if self.direction not in MAP_DIRECTIONS:
+            raise ValueError(f"bad map direction {self.direction!r}")
+
+    @property
+    def maps_to_device(self) -> bool:
+        return self.direction in ("to", "tofrom")
+
+    @property
+    def maps_from_device(self) -> bool:
+        return self.direction in ("from", "tofrom")
+
+
+@dataclasses.dataclass
+class Task:
+    """One ``target`` task: a function applied to mapped buffers."""
+
+    tid: int
+    fn: Callable[..., Any]          # base function; variant resolved at run
+    args: tuple[Any, ...]           # Buffers and plain python scalars
+    kwargs: dict[str, Any]
+    depend_in: tuple[DepToken, ...]
+    depend_out: tuple[DepToken, ...]
+    maps: tuple[MapClause, ...]
+    device: str | None              # None => host task (plain `omp task`)
+    nowait: bool = True
+
+    @property
+    def is_target(self) -> bool:
+        return self.device is not None
+
+    @property
+    def fn_name(self) -> str:
+        return getattr(self.fn, "__name__", str(self.fn))
+
+    def buffers(self) -> tuple[Buffer, ...]:
+        return tuple(m.buffer for m in self.maps)
+
+    def map_for(self, buf: Buffer) -> MapClause | None:
+        for m in self.maps:
+            if m.buffer is buf:
+                return m
+        return None
+
+    def __repr__(self) -> str:
+        return f"Task#{self.tid}:{self.fn_name}@{self.device or 'host'}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Edge:
+    """A dependence edge src → dst carrying ``token``."""
+
+    src: int
+    dst: int
+    token: DepToken
+
+
+class TaskGraph:
+    """The frozen DAG consumed at the synchronization point."""
+
+    def __init__(self, tasks: Sequence[Task]):
+        self.tasks: list[Task] = list(tasks)
+        self.edges: list[Edge] = self._build_edges(self.tasks)
+        self._succ: dict[int, list[Edge]] = {}
+        self._pred: dict[int, list[Edge]] = {}
+        for e in self.edges:
+            self._succ.setdefault(e.src, []).append(e)
+            self._pred.setdefault(e.dst, []).append(e)
+        self.order: list[int] = self._toposort()
+
+    # OpenMP depend semantics: an `in:tok` depends on the *latest preceding*
+    # task with `out:tok`; an `out:tok` additionally serializes against
+    # preceding readers of `tok` (anti-dependence).
+    @staticmethod
+    def _build_edges(tasks: Sequence[Task]) -> list[Edge]:
+        edges: list[Edge] = []
+        last_writer: dict[DepToken, int] = {}
+        readers_since_write: dict[DepToken, list[int]] = {}
+        for t in tasks:
+            for tok in t.depend_in:
+                if tok in last_writer:
+                    edges.append(Edge(last_writer[tok], t.tid, tok))
+                readers_since_write.setdefault(tok, []).append(t.tid)
+            for tok in t.depend_out:
+                for r in readers_since_write.get(tok, ()):  # anti-dep
+                    if r != t.tid:
+                        edges.append(Edge(r, t.tid, tok))
+                if tok in last_writer and last_writer[tok] != t.tid:
+                    edges.append(Edge(last_writer[tok], t.tid, tok))  # WAW
+                last_writer[tok] = t.tid
+                readers_since_write[tok] = []
+        # dedupe (e.g. in+out of same token between same pair)
+        seen: set[tuple[int, int]] = set()
+        out: list[Edge] = []
+        for e in edges:
+            if (e.src, e.dst) not in seen:
+                seen.add((e.src, e.dst))
+                out.append(e)
+        return out
+
+    def _toposort(self) -> list[int]:
+        indeg = {t.tid: 0 for t in self.tasks}
+        for e in self.edges:
+            indeg[e.dst] += 1
+        # Kahn, stable in creation order (OpenMP ready-queue is FIFO-ish and
+        # determinism matters for the round-robin mapper).
+        ready = [t.tid for t in self.tasks if indeg[t.tid] == 0]
+        order: list[int] = []
+        while ready:
+            tid = ready.pop(0)
+            order.append(tid)
+            for e in self._succ.get(tid, ()):
+                indeg[e.dst] -= 1
+                if indeg[e.dst] == 0:
+                    ready.append(e.dst)
+        if len(order) != len(self.tasks):
+            raise ValueError("dependence cycle in task graph")
+        return order
+
+    # -- queries ----------------------------------------------------------
+    def task(self, tid: int) -> Task:
+        return self.tasks[tid]
+
+    def successors(self, tid: int) -> list[int]:
+        return [e.dst for e in self._succ.get(tid, ())]
+
+    def predecessors(self, tid: int) -> list[int]:
+        return [e.src for e in self._pred.get(tid, ())]
+
+    def buffers(self) -> list[Buffer]:
+        seen: dict[int, Buffer] = {}
+        for t in self.tasks:
+            for b in t.buffers():
+                seen.setdefault(id(b), b)
+        return list(seen.values())
+
+    def chains(self, contiguous: bool = True) -> list[list[int]]:
+        """Maximal linear chains in topological order.
+
+        A chain is a run of tasks t0 → t1 → ... where each link is the *only*
+        out-edge of its source and the *only* in-edge of its destination, all
+        tasks target the same device, and — when ``contiguous`` (the
+        executor's fusion mode) — the run is contiguous in the topological
+        order, so executing a chain as one fused unit realizes exactly the
+        interleaving the transfer planner committed to (matters for buffers
+        shared with token-unordered tasks).  The mapper uses
+        ``contiguous=False``: slot assignment doesn't reorder execution.
+        Chains are the unit the executor fuses and the pipeline executor maps
+        around the ring — the direct IP→IP paths of the paper.
+        """
+        pos = {tid: i for i, tid in enumerate(self.order)}
+        in_chain: set[int] = set()
+        chains: list[list[int]] = []
+        for tid in self.order:
+            if tid in in_chain:
+                continue
+            chain = [tid]
+            in_chain.add(tid)
+            cur = tid
+            while True:
+                succ = self.successors(cur)
+                if len(succ) != 1:
+                    break
+                nxt = succ[0]
+                if nxt in in_chain or len(self.predecessors(nxt)) != 1:
+                    break
+                if self.task(nxt).device != self.task(tid).device:
+                    break
+                if contiguous and pos[nxt] != pos[cur] + 1:
+                    break  # keep schedule order intact for fused execution
+                chain.append(nxt)
+                in_chain.add(nxt)
+                cur = nxt
+            chains.append(chain)
+        return chains
+
+    def __len__(self) -> int:
+        return len(self.tasks)
+
+
+class TaskRegion:
+    """``omp parallel`` + ``omp single`` scope that *records* tasks.
+
+    On ``__exit__`` (the synchronization point) the recorded graph is frozen
+    and handed to the executor — the paper's deferred-dispatch semantics.
+    """
+
+    def __init__(self, cluster=None, device: str | None = None,
+                 executor=None, defer: bool = True):
+        from repro.core.executor import GraphExecutor  # cycle-free import
+
+        self.device = device
+        self._tasks: list[Task] = []
+        self._graph: TaskGraph | None = None
+        self.defer = defer
+        self.executor = executor or GraphExecutor(cluster=cluster)
+        self.transfer_log = None  # populated at exit
+
+    # -- recording API ------------------------------------------------
+    def buffer(self, value: Any, name: str | None = None) -> Buffer:
+        return Buffer(value, name or f"buf{len(self._tasks)}")
+
+    def dep_tokens(self, name: str, n: int) -> list[DepToken]:
+        return [DepToken(name, i) for i in range(n)]
+
+    def target(self, fn: Callable[..., Any], *args: Any,
+               depend_in: Sequence[DepToken] = (),
+               depend_out: Sequence[DepToken] = (),
+               map: dict[Buffer | str, str] | None = None,
+               device: Any = _UNSET,
+               nowait: bool = True, **kwargs: Any) -> Task:
+        """Record ``#pragma omp target ... nowait``-style task."""
+        bufs = [a for a in args if isinstance(a, Buffer)]
+        maps = self._resolve_maps(map, bufs)
+        task = Task(
+            tid=len(self._tasks), fn=fn, args=tuple(args), kwargs=dict(kwargs),
+            depend_in=tuple(depend_in), depend_out=tuple(depend_out),
+            maps=maps, device=self.device if device is _UNSET else device,
+            nowait=nowait)
+        self._tasks.append(task)
+        return task
+
+    def task(self, fn: Callable[..., Any], *args: Any, **kw: Any) -> Task:
+        """Plain ``omp task`` — a host task (device=None)."""
+        kw["device"] = None
+        return self.target(fn, *args, **kw)
+
+    @staticmethod
+    def _resolve_maps(map_spec, bufs: Sequence[Buffer]) -> tuple[MapClause, ...]:
+        if map_spec is None:  # default: tofrom for every buffer arg (OpenMP default)
+            return tuple(MapClause(b, "tofrom") for b in bufs)
+        clauses = []
+        by_name = {b.name: b for b in bufs}
+        for key, direction in map_spec.items():
+            buf = key if isinstance(key, Buffer) else by_name[key]
+            clauses.append(MapClause(buf, direction))
+        mapped = {id(c.buffer) for c in clauses}
+        for b in bufs:  # unmentioned buffer args default to tofrom
+            if id(b) not in mapped:
+                clauses.append(MapClause(b, "tofrom"))
+        return tuple(clauses)
+
+    # -- synchronization point ------------------------------------------
+    def graph(self) -> TaskGraph:
+        if self._graph is None:
+            self._graph = TaskGraph(self._tasks)
+        return self._graph
+
+    def __enter__(self) -> "TaskRegion":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if exc_type is not None:
+            return  # don't run the graph if the region body raised
+        self.transfer_log = self.executor.execute(self.graph(), defer=self.defer)

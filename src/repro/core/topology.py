@@ -1,0 +1,99 @@
+"""Cluster topology description — the analogue of the paper's ``conf.json``.
+
+The VC709 plugin of the paper reads a ``conf.json`` describing (a) bitstream
+locations, (b) the number of FPGAs, (c) the IPs available in each FPGA and
+(d) the addresses of IPs and FPGAs, with the boards connected in a ring.
+
+Here the "cluster" is a (multi-pod) TPU mesh: *pods* play the role of cluster
+nodes, *stage slots* play the role of FPGA boards along the ring, and *IPs*
+are compute slots within a stage (on TPU: the per-stage device group).  The
+class is JSON-round-trippable so launch scripts can ship a literal conf.json.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Iterator
+
+
+@dataclasses.dataclass(frozen=True)
+class IPSlot:
+    """One IP-core slot: ``(node, board, slot)`` — the unit tasks map onto."""
+
+    node: int   # cluster node (paper: host machine / here: pod)
+    board: int  # FPGA board within the node (here: stage group within pod)
+    slot: int   # IP index within the board (here: compute slot within stage)
+
+    def __repr__(self) -> str:  # compact, used in schedules/logs
+        return f"ip({self.node}.{self.board}.{self.slot})"
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterConfig:
+    """Topology of the accelerator cluster.
+
+    ``ring_order`` of all IP slots defines the paper's "closest to the host
+    computer first" ordering: boards are enumerated ring-wise starting at the
+    board wired to the host PCIe link, IP slots within a board in index order.
+    """
+
+    num_nodes: int = 1
+    boards_per_node: int = 6          # paper: 6 × VC709
+    ips_per_board: int = 4            # paper: up to 4 stencil IPs per FPGA
+    topology: str = "ring"            # paper: fiber-optic ring
+    link_gbps: float = 40.0           # paper: 4 × 10 Gb/s SFP per board
+    bitstreams: dict[str, str] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        if self.topology not in ("ring", "torus"):
+            raise ValueError(f"unsupported topology: {self.topology!r}")
+        if min(self.num_nodes, self.boards_per_node, self.ips_per_board) < 1:
+            raise ValueError("cluster dimensions must be >= 1")
+
+    # -- enumeration ------------------------------------------------------
+    @property
+    def num_boards(self) -> int:
+        return self.num_nodes * self.boards_per_node
+
+    @property
+    def num_ips(self) -> int:
+        return self.num_boards * self.ips_per_board
+
+    def ring_order(self) -> Iterator[IPSlot]:
+        """All IP slots, nearest-to-host first (ring enumeration)."""
+        for node in range(self.num_nodes):
+            for board in range(self.boards_per_node):
+                for slot in range(self.ips_per_board):
+                    yield IPSlot(node, board, slot)
+
+    def ip_index(self, ip: IPSlot) -> int:
+        """Position of ``ip`` in the ring order (= distance rank from host)."""
+        return (ip.node * self.boards_per_node + ip.board) * self.ips_per_board + ip.slot
+
+    def board_index(self, ip: IPSlot) -> int:
+        return ip.node * self.boards_per_node + ip.board
+
+    def hop_distance(self, a: IPSlot, b: IPSlot) -> int:
+        """Inter-board hops between two IPs (0 if same board).
+
+        On the ring, a frame travels forward (the paper's optical links are
+        unidirectional per channel); on a torus we use the shorter way round.
+        """
+        ba, bb = self.board_index(a), self.board_index(b)
+        fwd = (bb - ba) % self.num_boards
+        if self.topology == "ring":
+            return fwd
+        return min(fwd, self.num_boards - fwd)
+
+    # -- conf.json --------------------------------------------------------
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), indent=2, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, text: str) -> "ClusterConfig":
+        return cls(**json.loads(text))
+
+    @classmethod
+    def paper_testbed(cls) -> "ClusterConfig":
+        """The paper's experimental platform: 6 VC709 boards on one host."""
+        return cls(num_nodes=1, boards_per_node=6, ips_per_board=4)

@@ -1,0 +1,81 @@
+"""``#pragma omp declare variant`` — function variants selected by device arch.
+
+Paper (Listing 3):
+
+.. code-block:: c
+
+    #pragma omp declare variant (void do_laplace2d(int*,int,int)) \\
+        match (device=arch(vc709))
+    extern void hw_laplace2d(int*,int,int);
+
+The software function is the verification oracle; passing the ``vc709`` flag
+swaps in the hardware IP.  Here: the *software* variant is pure jnp/numpy and
+the *hardware* variant is a Pallas TPU kernel (or any other specialized
+implementation).  ``resolve(fn, arch)`` performs the context match.
+
+Matching walks an arch fallback chain, e.g. a kernel declared for ``"tpu"``
+matches a request for ``"tpu-v5e"``; ``interpret`` arches (``"tpu-interpret"``)
+let the CPU container execute TPU kernels through the Pallas interpreter.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+_REGISTRY: dict[Callable, dict[str, Callable]] = {}
+_BASE_OF: dict[Callable, Callable] = {}
+
+# arch → fallback parent (None terminates). Request "tpu-v5e" matches a
+# variant registered for "tpu"; plain "cpu" has no hw parent so the base
+# (software) function runs.
+_ARCH_PARENT: dict[str, str | None] = {
+    "tpu-v5e": "tpu",
+    "tpu-v5p": "tpu",
+    "tpu-interpret": "tpu",
+    "tpu": None,
+    "vc709": None,   # honor the paper's own flag as a registrable arch
+    "cpu": None,
+}
+
+
+def register_arch(arch: str, parent: str | None = None) -> None:
+    _ARCH_PARENT.setdefault(arch, parent)
+
+
+def declare_variant(base: Callable, match: str) -> Callable[[Callable], Callable]:
+    """Decorator: register the decorated fn as ``base``'s ``match``-arch variant."""
+
+    def deco(variant_fn: Callable) -> Callable:
+        _REGISTRY.setdefault(base, {})[match] = variant_fn
+        _BASE_OF[variant_fn] = base
+        return variant_fn
+
+    return deco
+
+
+def variants_of(base: Callable) -> dict[str, Callable]:
+    return dict(_REGISTRY.get(base, {}))
+
+
+def base_of(fn: Callable) -> Callable:
+    """The software base of a variant (identity for base functions)."""
+    return _BASE_OF.get(fn, fn)
+
+
+def resolve(fn: Callable, arch: str | None) -> Callable:
+    """Context selection: best variant of ``fn`` for ``arch``.
+
+    Falls back along the arch parent chain, then to the base function —
+    mirroring OpenMP's "most specific matching variant, else base".
+    """
+    base = base_of(fn)
+    table = _REGISTRY.get(base)
+    cur = arch
+    while table is not None and cur is not None:
+        if cur in table:
+            return table[cur]
+        cur = _ARCH_PARENT.get(cur)
+    return base
+
+
+def call_variant(fn: Callable, arch: str | None, *args: Any, **kw: Any) -> Any:
+    return resolve(fn, arch)(*args, **kw)

@@ -1,0 +1,83 @@
+"""Synthetic-token data pipeline with device prefetch.
+
+Deterministic synthetic corpora (seeded per shard/step, so restarts resume
+bit-identically) shaped exactly like the real thing: token/label pairs for
+LM training, frame/patch embeddings for the stub frontends.  A two-deep
+host→device prefetch queue overlaps input transfer with compute — the
+DMA/VFIFO role of the paper's platform (see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import collections
+from typing import Any, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def synthetic_batch(cfg: ModelConfig, batch: int, seq: int, step: int,
+                    seed: int = 0) -> dict[str, np.ndarray]:
+    """Markov-ish synthetic tokens (learnable structure, not uniform noise)."""
+    rng = np.random.RandomState((seed * 1_000_003 + step) % (2 ** 31))
+    v = cfg.vocab_size
+    base = rng.randint(0, v, size=(batch, seq + 1))
+    # inject bigram structure: with p=.5, next token = (tok*7+3) % v
+    rep = (base[:, :-1] * 7 + 3) % v
+    coin = rng.rand(batch, seq) < 0.5
+    base[:, 1:] = np.where(coin, rep, base[:, 1:])
+    out = {"tokens": base[:, :-1].astype(np.int32),
+           "labels": base[:, 1:].astype(np.int32)}
+    if cfg.frontend == "patch":
+        out["prefix_embed"] = rng.randn(
+            batch, cfg.num_prefix_tokens, cfg.d_model).astype(np.float32)
+    if cfg.frontend == "frames":
+        out["frames"] = rng.randn(batch, seq, cfg.d_model).astype(np.float32)
+    return out
+
+
+def data_iterator(cfg: ModelConfig, batch: int, seq: int, seed: int = 0,
+                  start_step: int = 0) -> Iterator[dict]:
+    step = start_step
+    while True:
+        yield synthetic_batch(cfg, batch, seq, step, seed)
+        step += 1
+
+
+def shard_batch(batch: dict, sharding) -> dict:
+    """Place a host batch onto the mesh with the given NamedSharding map."""
+    if sharding is None:
+        return {k: jnp.asarray(v) for k, v in batch.items()}
+    return {k: jax.device_put(v, sharding[k] if isinstance(sharding, dict)
+                              else sharding)
+            for k, v in batch.items()}
+
+
+class Prefetcher:
+    """Depth-N host→device prefetch queue (overlap input DMA with compute)."""
+
+    def __init__(self, it: Iterator[dict], sharding=None, depth: int = 2):
+        self._it = it
+        self._sharding = sharding
+        self._q: collections.deque = collections.deque()
+        self._depth = depth
+        for _ in range(depth):
+            self._enqueue()
+
+    def _enqueue(self):
+        try:
+            self._q.append(shard_batch(next(self._it), self._sharding))
+        except StopIteration:
+            pass
+
+    def __iter__(self):
+        return self
+
+    def __next__(self) -> dict:
+        if not self._q:
+            raise StopIteration
+        batch = self._q.popleft()
+        self._enqueue()
+        return batch

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel subpackage has ``kernel.py`` (pl.pallas_call + BlockSpec VMEM
+tiling), ``ops.py`` (the jitted public wrapper, auto-interpret off-TPU) and
+``ref.py`` (the pure-jnp oracle used by the allclose test sweeps).
+"""

@@ -1,0 +1,122 @@
+"""Pallas TPU flash-attention (forward): online-softmax over KV blocks with
+the score matrix resident in VMEM only.
+
+Grid: (batch·kv_head, q_blocks, kv_blocks) — the kv-block axis is the
+innermost (sequential on TPU), so the running (m, l, acc) state for one
+query block lives in VMEM scratch across kv iterations — the classic
+FlashAttention schedule mapped onto Pallas' grid-carried scratch.
+
+Block shapes keep the MXU happy: q/kv blocks are multiples of 128 in the
+sequence dims and the full head_dim minor. GQA is handled by folding the
+query-group dim into the q rows of a kv head's block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc, *,
+               block_q, block_k, causal, prefix_len, scale, seq_q, seq_k):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    q = q_ref[0].astype(jnp.float32) * scale        # [bq, hd]
+    k = k_ref[0].astype(jnp.float32)                # [bk, hd]
+    v = v_ref[0].astype(jnp.float32)
+    s = q @ k.T                                     # [bq, bk]
+    if causal:
+        qpos = qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 0)
+        kpos = ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        visible = (qpos >= kpos) | (kpos < prefix_len)
+        s = jnp.where(visible, s, NEG_INF)
+    m_prev, l_prev = m_sc[...], l_sc[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + p.sum(axis=-1, keepdims=True)
+    acc_sc[...] = acc_sc[...] * corr + p @ v
+    m_sc[...] = m_new
+    l_sc[...] = l_new
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _finish():
+        o_ref[0] = (acc_sc[...] /
+                    jnp.maximum(l_sc[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, causal=True, prefix_len=0,
+                        block_q=128, block_k=128,
+                        interpret=False) -> jnp.ndarray:
+    """q [B,S,H,hd], k/v [B,Sk,K,hd] → [B,S,H,hd].
+
+    GQA: the H query heads are grouped per kv head; each (b, kv-head)
+    program sees its group's queries stacked along the row dim.
+    """
+    b, sq, h, hd = q.shape
+    _, sk, kh, _ = k.shape
+    g = h // kh
+    block_q = min(block_q, sq * g)
+    block_k = min(block_k, sk)
+    # [B, S, K, G, hd] → [B·K, G·S, hd]: group-major rows so q rows of one
+    # (kv head) program are contiguous and causal indexing stays per-row.
+    qr = (q.reshape(b, sq, kh, g, hd).transpose(0, 2, 3, 1, 4)
+          .reshape(b * kh, g * sq, hd))
+    kr = k.transpose(0, 2, 1, 3).reshape(b * kh, sk, hd)
+    vr = v.transpose(0, 2, 1, 3).reshape(b * kh, sk, hd)
+
+    n_q = (g * sq + block_q - 1) // block_q
+    n_k = (sk + block_k - 1) // block_k
+    assert (g * sq) % block_q == 0 and sk % block_k == 0, \
+        (sq, g, block_q, sk, block_k)
+
+    # causal masking needs q-position modulo the group fold: rows are
+    # g·sq long with position pattern [0..sq)×g — handled by passing the
+    # row→position mapping through block index arithmetic only when g==1;
+    # for g>1 we fall back to per-group vmap (rows stay pure positions).
+    if g > 1:
+        fa = functools.partial(flash_attention_fwd, causal=causal,
+                               prefix_len=prefix_len, block_q=block_q,
+                               block_k=block_k, interpret=interpret)
+        qg = q.reshape(b, sq, kh, g, hd)
+        outs = [fa(qg[:, :, :, j], k, v) for j in range(g)]
+        return jnp.stack(outs, axis=3).reshape(b, sq, h, hd)
+
+    kern = functools.partial(
+        _fa_kernel, block_q=block_q, block_k=block_k, causal=causal,
+        prefix_len=prefix_len, scale=hd ** -0.5, seq_q=sq, seq_k=sk)
+    out = pl.pallas_call(
+        kern,
+        grid=(b * kh, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda bh, qi, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd),
+                               lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * kh, sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+        name="flash_attention_fwd",
+    )(qr, kr, vr)
+    return (out.reshape(b, kh, sq, 1, hd).transpose(0, 2, 1, 3, 4)
+            .reshape(b, sq, h, hd))

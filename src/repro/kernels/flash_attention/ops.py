@@ -1,0 +1,28 @@
+"""Jitted wrapper for the flash-attention kernel (auto-interpret off-TPU),
+variant-registered against the model's attention entry point."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "prefix_len",
+                                             "block_q", "block_k",
+                                             "interpret"))
+def _run(q, k, v, causal, prefix_len, block_q, block_k, interpret):
+    return flash_attention_fwd(q, k, v, causal=causal,
+                               prefix_len=prefix_len, block_q=block_q,
+                               block_k=block_k, interpret=interpret)
+
+
+def flash_attention(q, k, v, causal: bool = True, prefix_len: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool | None = None) -> jnp.ndarray:
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _run(q, k, v, causal, prefix_len, block_q, block_k, interpret)

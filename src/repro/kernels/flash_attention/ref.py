@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the flash-attention kernel: plain masked softmax
+attention (GQA layout, causal / prefix-LM)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.attention import full_attention
+
+
+def flash_attention_ref(q, k, v, causal: bool = True,
+                        prefix_len: int = 0) -> jnp.ndarray:
+    """q [B,S,H,hd], k/v [B,S,K,hd] → [B,S,H,hd] (f32 math inside)."""
+    return full_attention(q, k, v, causal=causal, prefix_len=prefix_len)

@@ -1,0 +1,90 @@
+"""Pallas TPU selective-scan: the SSM state lives in VMEM for the whole
+sequence.
+
+The XLA chunked-scan path materializes [B, chunk, nh, hd, N] state tensors
+in HBM every chunk — N× the I/O of the math's true inputs/outputs.  This
+kernel streams (dt, x, B, C) chunk blocks into VMEM, carries h [nh, hd, N]
+in VMEM scratch across the (sequential, innermost) chunk grid axis, and
+writes only y — HBM traffic is exactly inputs + outputs, independent of N
+(the CUDA selective-scan's memory behavior, re-tiled for TPU: the
+recurrence runs as a fori over in-VMEM token slabs; a follow-up upgrade is
+the SSD block-matmul form to shift work from VPU to MXU).
+
+Unified head form (see ref.py): mamba2 per-head scalar A → A rows
+constant; mamba1 → hd=1, A = the [Di, N] matrix.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(dt_ref, x_ref, b_ref, c_ref, a_ref, y_ref, hlast_ref,
+                 h_sc, *, chunk):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_sc[...] = jnp.zeros_like(h_sc)
+
+    a_mat = a_ref[...]                       # [nh, N]
+
+    def body(t, _):
+        dt_t = dt_ref[0, t]                  # [nh]
+        x_t = x_ref[0, t]                    # [nh, hd]
+        b_t = b_ref[0, t]                    # [N]
+        c_t = c_ref[0, t]
+        decay = jnp.exp(dt_t[:, None] * a_mat)           # [nh, N]
+        bx = (dt_t[:, None] * x_t)[:, :, None] * b_t[None, None, :]
+        h_sc[...] = decay[:, None, :] * h_sc[...] + bx
+        y = jnp.sum(h_sc[...] * c_t[None, None, :], axis=-1)  # [nh, hd]
+        pl.store(y_ref, (0, pl.dslice(t, 1), slice(None), slice(None)),
+                 y[None].astype(y_ref.dtype))
+        return 0
+
+    jax.lax.fori_loop(0, chunk, body, 0)
+
+    @pl.when(ci == pl.num_programs(1) - 1)
+    def _finish():
+        hlast_ref[0] = h_sc[...]
+
+
+def mamba_scan_pallas(dt, x, a_mat, b_seq, c_seq, chunk: int = 128,
+                      interpret: bool = False):
+    """dt [B,S,nh], x [B,S,nh,hd], a [nh,N], b/c [B,S,N] →
+    (y [B,S,nh,hd], h_last [B,nh,hd,N])."""
+    bsz, s, nh = dt.shape
+    hd = x.shape[-1]
+    n = b_seq.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    n_chunks = s // chunk
+    kern = functools.partial(_scan_kernel, chunk=chunk)
+    y, h_last = pl.pallas_call(
+        kern,
+        grid=(bsz, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, nh), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, nh, hd), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((nh, n), lambda b, c: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, nh, hd), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, nh, hd, n), lambda b, c: (b, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, s, nh, hd), x.dtype),
+            jax.ShapeDtypeStruct((bsz, nh, hd, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((nh, hd, n), jnp.float32)],
+        interpret=interpret,
+        name="mamba_scan",
+    )(dt.astype(jnp.float32), x.astype(jnp.float32), b_seq.astype(jnp.float32),
+      c_seq.astype(jnp.float32), a_mat.astype(jnp.float32))
+    return y, h_last

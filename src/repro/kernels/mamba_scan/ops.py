@@ -1,0 +1,22 @@
+"""Jitted wrapper for the mamba selective-scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mamba_scan.kernel import mamba_scan_pallas
+from repro.kernels.mamba_scan.ref import mamba_scan_ref
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def _run(dt, x, a_mat, b_seq, c_seq, chunk, interpret):
+    return mamba_scan_pallas(dt, x, a_mat, b_seq, c_seq, chunk, interpret)
+
+
+def mamba_scan(dt, x, a_mat, b_seq, c_seq, chunk: int = 128,
+               interpret: bool | None = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _run(dt, x, a_mat, b_seq, c_seq, chunk, interpret)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the selective-scan kernel (unified mamba1/mamba2
+head form): h_t = exp(dt_t ⊙ A) ⊙ h_{t-1} + (dt_t·x_t) ⊗ B_t, y_t = h_t·C_t.
+
+Shapes: dt [B,S,nh]; x [B,S,nh,hd]; A [nh,N]; B,C [B,S,N].
+mamba2: hd = head_dim, A rows constant (scalar per head);
+mamba1: nh = channels, hd = 1, A the full [Di, N] matrix.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mamba_scan_ref(dt, x, a_mat, b_seq, c_seq, h0=None):
+    bsz, s, nh = dt.shape
+    hd = x.shape[-1]
+    n = b_seq.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((bsz, nh, hd, n), jnp.float32)
+
+    def step(h, xs):
+        dt_t, x_t, b_t, c_t = xs
+        decay = jnp.exp(dt_t[..., None] * a_mat)          # [B,nh,N]
+        bx = (dt_t[..., None] * x_t)[..., None] * b_t[:, None, None, :]
+        h = decay[:, :, None, :] * h + bx
+        y = jnp.einsum("bhdn,bn->bhd", h, c_t)
+        return h, y
+
+    h_last, ys = jax.lax.scan(
+        step, h0,
+        (jnp.moveaxis(dt, 1, 0), jnp.moveaxis(x, 1, 0),
+         jnp.moveaxis(b_seq, 1, 0), jnp.moveaxis(c_seq, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1), h_last

@@ -1,0 +1,9 @@
+from repro.kernels.stencil2d.ops import (pick_block_rows, stencil2d,
+                                         stencil2d_reference)
+from repro.kernels.stencil2d.ref import (DIFFUSION2D, JACOBI9, LAPLACE2D,
+                                         diffusion2d_coeffs, flops_per_cell,
+                                         jacobi9_coeffs, stencil2d_ref)
+
+__all__ = ["stencil2d", "stencil2d_reference", "stencil2d_ref",
+           "pick_block_rows", "LAPLACE2D", "DIFFUSION2D", "JACOBI9",
+           "diffusion2d_coeffs", "jacobi9_coeffs", "flops_per_cell"]

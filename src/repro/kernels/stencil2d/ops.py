@@ -1,0 +1,54 @@
+"""Jitted public wrapper for the 2-D stencil kernel.
+
+Picks a VMEM-safe row-block size, auto-selects Pallas interpret mode on
+non-TPU backends (the container validation path), and loops iterations.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.stencil2d.kernel import stencil2d_pallas
+from repro.kernels.stencil2d.ref import stencil2d_ref
+
+# ~6 live f32 copies of the tile (x, 3 row-views, acc, out) + slack.
+_VMEM_BUDGET_BYTES = 12 * 1024 * 1024
+_LIVE_FACTOR = 8
+
+
+def pick_block_rows(h: int, w: int, itemsize: int = 4) -> int:
+    """Largest power-of-two divisor of H whose tile fits the VMEM budget."""
+    best = 1
+    bh = 1
+    while bh <= h:
+        if h % bh == 0 and bh * w * itemsize * _LIVE_FACTOR <= _VMEM_BUDGET_BYTES:
+            best = bh
+        bh *= 2
+    return best
+
+
+@functools.partial(jax.jit, static_argnames=("coeffs", "iterations",
+                                             "block_rows", "interpret"))
+def _run(x, coeffs, iterations, block_rows, interpret):
+    step = lambda _, v: stencil2d_pallas(v, coeffs, block_rows, interpret)
+    return jax.lax.fori_loop(0, iterations, step, x)
+
+
+def stencil2d(x: jnp.ndarray, coeffs, iterations: int = 1,
+              block_rows: int | None = None,
+              interpret: bool | None = None) -> jnp.ndarray:
+    """Apply ``iterations`` steps of the 3×3 stencil ``coeffs`` to ``x``."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if block_rows is None:
+        block_rows = pick_block_rows(*x.shape, x.dtype.itemsize)
+    coeffs = tuple(tuple(float(c) for c in row) for row in coeffs)
+    return _run(x, coeffs, iterations, block_rows, interpret)
+
+
+def stencil2d_reference(x: jnp.ndarray, coeffs,
+                        iterations: int = 1) -> jnp.ndarray:
+    """The pure-jnp oracle (re-exported for benchmarks)."""
+    return stencil2d_ref(x, coeffs, iterations)

@@ -1,0 +1,63 @@
+"""Pure-jnp oracle for the 2-D stencil family (paper Table I, kernels 1–3).
+
+A stencil is a static 3×3 coefficient matrix ``coeffs[di+1][dj+1]`` applied
+at every interior cell; boundary cells are Dirichlet (not updated) — the
+shift-register IPs of the paper likewise only emit interior cells.
+
+out[i, j] = Σ_{di,dj} coeffs[di+1][dj+1] · V[i+di, j+dj]   (interior)
+out[i, j] = V[i, j]                                        (boundary)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Coeffs2D = tuple[tuple[float, float, float], ...]
+
+# -- the paper's kernels (Table I) --------------------------------------
+LAPLACE2D: Coeffs2D = ((0.0, 0.25, 0.0),
+                       (0.25, 0.0, 0.25),
+                       (0.0, 0.25, 0.0))
+
+def diffusion2d_coeffs(c1=0.125, c2=0.125, c3=0.5, c4=0.125, c5=0.125) -> Coeffs2D:
+    """C1·V[i,j-1] + C2·V[i-1,j] + C3·V[i,j] + C4·V[i+1,j] + C5·V[i,j+1]."""
+    return ((0.0, c2, 0.0),
+            (c1, c3, c5),
+            (0.0, c4, 0.0))
+
+def jacobi9_coeffs(cs: tuple[float, ...] = (0.0625, 0.125, 0.0625,
+                                            0.125, 0.25, 0.125,
+                                            0.0625, 0.125, 0.0625)) -> Coeffs2D:
+    """Full 9-point: C1..C9 row-major over the 3×3 neighborhood."""
+    return (tuple(cs[0:3]), tuple(cs[3:6]), tuple(cs[6:9]))
+
+DIFFUSION2D: Coeffs2D = diffusion2d_coeffs()
+JACOBI9: Coeffs2D = jacobi9_coeffs()
+
+
+def flops_per_cell(coeffs) -> int:
+    """1 mul + 1 add per nonzero tap (matches the paper's GFLOP counting)."""
+    taps = sum(1 for row in coeffs for c in jnp.asarray(row).reshape(-1).tolist()
+               if c != 0.0)
+    return 2 * taps
+
+
+def stencil2d_ref(x: jnp.ndarray, coeffs: Coeffs2D,
+                  iterations: int = 1) -> jnp.ndarray:
+    """Reference: shifted-slice weighted sum, interior update only."""
+    assert x.ndim == 2
+
+    def one(v):
+        acc = jnp.zeros(v.shape, jnp.float32)
+        v32 = v.astype(jnp.float32)
+        for di in (-1, 0, 1):
+            for dj in (-1, 0, 1):
+                c = float(coeffs[di + 1][dj + 1])
+                if c == 0.0:
+                    continue
+                acc = acc + c * jnp.roll(v32, shift=(-di, -dj), axis=(0, 1))
+        out = acc.astype(v.dtype)
+        interior = jnp.zeros(v.shape, bool).at[1:-1, 1:-1].set(True)
+        return jnp.where(interior, out, v)
+
+    return jax.lax.fori_loop(0, iterations, lambda _, v: one(v), x)

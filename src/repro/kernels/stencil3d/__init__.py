@@ -1,0 +1,9 @@
+from repro.kernels.stencil3d.ops import (pick_block_depth, stencil3d,
+                                         stencil3d_reference)
+from repro.kernels.stencil3d.ref import (DIFFUSION3D, LAPLACE3D,
+                                         diffusion3d_taps, flops_per_cell_3d,
+                                         stencil3d_ref)
+
+__all__ = ["stencil3d", "stencil3d_reference", "stencil3d_ref",
+           "pick_block_depth", "LAPLACE3D", "DIFFUSION3D",
+           "diffusion3d_taps", "flops_per_cell_3d"]

@@ -1,0 +1,46 @@
+"""Jitted public wrapper for the 3-D stencil kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.stencil3d.kernel import stencil3d_pallas
+from repro.kernels.stencil3d.ref import stencil3d_ref
+
+_VMEM_BUDGET_BYTES = 12 * 1024 * 1024
+_LIVE_FACTOR = 8
+
+
+def pick_block_depth(d: int, h: int, w: int, itemsize: int = 4) -> int:
+    best = 1
+    bd = 1
+    while bd <= d:
+        if d % bd == 0 and bd * h * w * itemsize * _LIVE_FACTOR <= _VMEM_BUDGET_BYTES:
+            best = bd
+        bd *= 2
+    return best
+
+
+@functools.partial(jax.jit, static_argnames=("taps", "iterations",
+                                             "block_d", "interpret"))
+def _run(x, taps, iterations, block_d, interpret):
+    step = lambda _, v: stencil3d_pallas(v, taps, block_d, interpret)
+    return jax.lax.fori_loop(0, iterations, step, x)
+
+
+def stencil3d(x: jnp.ndarray, taps, iterations: int = 1,
+              block_d: int | None = None,
+              interpret: bool | None = None) -> jnp.ndarray:
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if block_d is None:
+        block_d = pick_block_depth(*x.shape, x.dtype.itemsize)
+    taps = tuple((tuple(int(i) for i in o), float(c)) for o, c in taps)
+    return _run(x, taps, iterations, block_d, interpret)
+
+
+def stencil3d_reference(x: jnp.ndarray, taps,
+                        iterations: int = 1) -> jnp.ndarray:
+    return stencil3d_ref(x, taps, iterations)

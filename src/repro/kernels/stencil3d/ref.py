@@ -1,0 +1,56 @@
+"""Pure-jnp oracle for the 3-D stencil family (paper Table I, kernels 4–5).
+
+A 3-D stencil is a static dict of axis-aligned taps {(di,dj,dk): c} (7-point
+family — the paper's kernels only tap face neighbors + center).  Boundary
+cells (any face of the volume) are Dirichlet.
+
+NOTE on the paper's Table I: the printed formulas for kernels 4 and 5
+duplicate/omit terms (e.g. Laplace-3D lists V[i+1,j,k] twice and no k±1
+taps; Diffusion-3D lists k-1 but no k+1).  We implement the standard
+7-point stencils from the paper's source [13] (Waidyasooriya & Hariyama):
+Laplace-3D = mean of the 6 face neighbors; Diffusion-3D = C1..C7 over the
+6 neighbors + center. Recorded in DESIGN.md §2.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Taps3D = tuple[tuple[tuple[int, int, int], float], ...]
+
+LAPLACE3D: Taps3D = tuple(
+    ((di, dj, dk), 1.0 / 6.0)
+    for di, dj, dk in [(-1, 0, 0), (1, 0, 0), (0, -1, 0), (0, 1, 0),
+                       (0, 0, -1), (0, 0, 1)])
+
+
+def diffusion3d_taps(cs: tuple[float, ...] = (0.1, 0.1, 0.1, 0.4, 0.1, 0.1,
+                                              0.1)) -> Taps3D:
+    """C1..C7 over (j-1, i-1, k-1, center, i+1, j+1, k+1)."""
+    offs = [(0, -1, 0), (-1, 0, 0), (0, 0, -1), (0, 0, 0),
+            (1, 0, 0), (0, 1, 0), (0, 0, 1)]
+    return tuple((o, float(c)) for o, c in zip(offs, cs))
+
+DIFFUSION3D: Taps3D = diffusion3d_taps()
+
+
+def flops_per_cell_3d(taps: Taps3D) -> int:
+    return 2 * sum(1 for _, c in taps if c != 0.0)
+
+
+def stencil3d_ref(x: jnp.ndarray, taps: Taps3D,
+                  iterations: int = 1) -> jnp.ndarray:
+    assert x.ndim == 3
+
+    def one(v):
+        v32 = v.astype(jnp.float32)
+        acc = jnp.zeros(v.shape, jnp.float32)
+        for (di, dj, dk), c in taps:
+            if c == 0.0:
+                continue
+            acc = acc + c * jnp.roll(v32, shift=(-di, -dj, -dk), axis=(0, 1, 2))
+        out = acc.astype(v.dtype)
+        interior = jnp.zeros(v.shape, bool).at[1:-1, 1:-1, 1:-1].set(True)
+        return jnp.where(interior, out, v)
+
+    return jax.lax.fori_loop(0, iterations, lambda _, v: one(v), x)

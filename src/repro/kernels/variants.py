@@ -1,0 +1,32 @@
+"""declare_variant registrations binding the LM Pallas kernels to their
+software bases — the paper's Listing-3 verification flow (sw oracle ⇄ hw
+IP under a device flag) applied to the transformer hot spots, exactly as
+``stencil/ips.py`` does for the stencil IPs.
+
+Import this module to make `resolve(full_attention, "tpu")` return the
+flash kernel (the stencil registrations live with their IPs; these live
+here to keep kernels/ import-light)."""
+from __future__ import annotations
+
+from repro.core.variant import declare_variant
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mamba_scan import mamba_scan
+from repro.kernels.mamba_scan.ref import mamba_scan_ref
+from repro.models.attention import full_attention
+
+
+@declare_variant(base=full_attention, match="tpu")
+def hw_full_attention(q, k, v, causal: bool = True, q_offset=0,
+                      prefix_len: int = 0):
+    """Flash-attention kernel as the hardware variant of full_attention.
+    (q_offset must be 0 — the kernel computes from-position-zero blocks.)"""
+    assert isinstance(q_offset, int) and q_offset == 0, \
+        "hw variant supports q_offset=0 (train/prefill) only"
+    return flash_attention(q, k, v, causal=causal, prefix_len=prefix_len)
+
+
+@declare_variant(base=mamba_scan_ref, match="tpu")
+def hw_mamba_scan(dt, x, a_mat, b_seq, c_seq, h0=None):
+    assert h0 is None or not h0.any(), \
+        "hw variant starts from the zero state"
+    return mamba_scan(dt, x, a_mat, b_seq, c_seq)

@@ -1,0 +1,177 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any other import (jax locks device count on first init).
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+Single-cell mode (the default unit of work; used by the --all driver):
+
+    python -m repro.launch.dryrun --arch stablelm-12b --shape train_4k \
+        --mesh multi [--out experiments/dryrun]
+
+prints ``memory_analysis()`` / ``cost_analysis()`` and writes one JSON
+record with the roofline inputs (HLO FLOPs/bytes, per-collective bytes
+parsed from the optimized HLO, per-device memory stats).
+
+Driver mode compiles every assigned cell in subprocess isolation (one
+process per cell keeps 512-device XLA state bounded) and is resumable —
+existing records are skipped unless --force:
+
+    python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import dataclasses
+import json
+import subprocess
+import sys
+import time
+
+import jax
+
+from repro.configs import ARCHS, SHAPES, cells, get_arch
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import lowerable
+from repro.models import lm as lm_mod
+from repro.runtime.hloanalysis import analyze as hlo_analyze
+
+DEFAULT_OUT = "experiments/dryrun"
+
+# §Perf variants: config transforms applied on top of the registered arch.
+import dataclasses as _dc
+
+VARIANTS = {
+    "baseline": lambda cfg: cfg,
+    # hillclimb #3: pure DP + ZeRO-3 — the model axis joins the batch;
+    # removes SP activation all-gathers and TP all-reduces entirely.
+    "dp_zero3": lambda cfg: _dc.replace(
+        cfg, tp_enabled=False, dp_over_model=True,
+        fsdp_axes=("pod", "data", "model")),
+    # ablation: TP on but no sequence-sharded activations
+    "no_actsp": lambda cfg: cfg,   # handled via env knob in steps if needed
+}
+
+
+def record_path(out_dir: str, arch: str, shape: str, mesh_kind: str,
+                variant: str = "baseline") -> str:
+    suffix = "" if variant == "baseline" else f"__{variant}"
+    return os.path.join(out_dir, f"{arch}__{shape}__{mesh_kind}{suffix}.json")
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, out_dir: str,
+             variant: str = "baseline") -> dict:
+    cfg = VARIANTS[variant](get_arch(arch))
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_dev = len(mesh.devices.reshape(-1))
+
+    t0 = time.time()
+    fn, args, in_sh = lowerable(cfg, mesh, shape)
+    with mesh:
+        lowered = jax.jit(fn, in_shardings=in_sh).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        mem = {k: int(getattr(ma, k)) for k in (
+            "argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes",
+            "alias_size_in_bytes")}
+        print(ma)  # proves it fits
+    except Exception as e:  # pragma: no cover
+        print(f"memory_analysis unavailable: {e}")
+
+    cost = compiled.cost_analysis() or {}
+    print({k: cost[k] for k in ("flops", "bytes accessed")
+           if k in cost})
+
+    # trip-count-aware per-device cost from the optimized HLO (XLA's own
+    # cost_analysis counts loop bodies once — useless for scanned stacks)
+    hlo = compiled.as_text()
+    hc = hlo_analyze(hlo)
+
+    # MODEL_FLOPS: 6·N·D train / 2·N_active·D inference (D = tokens)
+    pstruct = args[0]
+    n_total = lm_mod.param_count(pstruct)
+    n_active = lm_mod.active_param_count(pstruct, cfg)
+    sh = SHAPES[shape]
+    tokens = sh.global_batch * (sh.seq_len if sh.kind != "decode" else 1)
+    model_flops = (6 if sh.kind == "train" else 2) * n_active * tokens
+
+    rec = {
+        "arch": arch, "shape": shape, "mesh": mesh_kind, "devices": n_dev,
+        "variant": variant,
+        "kind": sh.kind, "tokens": tokens,
+        "params_total": int(n_total), "params_active": int(n_active),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        # per-device, trip-count-aware (primary — see hloanalysis.py):
+        "hlo_flops": float(hc.flops),
+        "hlo_bytes": float(hc.bytes),
+        "collectives": {"bytes": {k: float(v) for k, v in hc.coll_bytes.items()},
+                        "counts": {k: float(v) for k, v in hc.coll_counts.items()},
+                        "total_bytes": float(hc.total_coll_bytes)},
+        # XLA's loop-blind numbers, kept for reference:
+        "xla_flops_once": float(cost.get("flops", 0.0)),
+        "xla_bytes_once": float(cost.get("bytes accessed", 0.0)),
+        "memory": mem,
+        "model_flops": float(model_flops),
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    with open(record_path(out_dir, arch, shape, mesh_kind, variant),
+              "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def drive_all(mesh_kinds: list[str], out_dir: str, force: bool,
+              archs: list[str] | None = None) -> int:
+    todo = []
+    for arch, shape in cells():
+        if archs and arch not in archs:
+            continue
+        for mk in mesh_kinds:
+            p = record_path(out_dir, arch, shape, mk)
+            if force or not os.path.exists(p):
+                todo.append((arch, shape, mk))
+    print(f"{len(todo)} cells to compile")
+    failures = 0
+    for i, (arch, shape, mk) in enumerate(todo):
+        t0 = time.time()
+        r = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+             "--shape", shape, "--mesh", mk, "--out", out_dir],
+            capture_output=True, text=True)
+        status = "ok" if r.returncode == 0 else "FAIL"
+        if r.returncode != 0:
+            failures += 1
+            print(r.stdout[-2000:])
+            print(r.stderr[-3000:])
+        print(f"[{i + 1}/{len(todo)}] {status} {arch} {shape} {mk} "
+              f"({time.time() - t0:.0f}s)", flush=True)
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
+    ap.add_argument("--shape", choices=sorted(SHAPES), default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--variant", default="baseline", choices=sorted(VARIANTS))
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args()
+
+    if args.all:
+        kinds = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+        sys.exit(1 if drive_all(kinds, args.out, args.force) else 0)
+
+    assert args.arch and args.shape, "--arch/--shape or --all required"
+    rec = run_cell(args.arch, args.shape, args.mesh, args.out, args.variant)
+    print(json.dumps(rec, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,313 @@
+"""Step builders + input specs for every (arch × shape) cell.
+
+``input_specs(arch, shape)`` returns weak-type-correct ShapeDtypeStruct
+stand-ins for every input of the lowered step (no device allocation) —
+params and optimizer state via ``jax.eval_shape`` over the real init
+functions, decode caches via ``jax.eval_shape`` over the real prefill path,
+so the dry-run lowers exactly the production pytrees.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, SHAPES, ShapeConfig
+from repro.models import lm
+from repro.models.transformer import NO_CTX, DistCtx
+from repro.optim import make_optimizer, schedule
+from repro.runtime import sharding as shard_rules
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+def make_ctx(cfg: ModelConfig, mesh: Mesh | None,
+             shape: ShapeConfig | None) -> DistCtx:
+    if mesh is None:
+        return NO_CTX
+    tp = mesh.shape.get("model", 1)
+    if not cfg.tp_enabled or cfg.dp_over_model:
+        tp = 1  # model axis not used for TP in this variant
+    baxes = shard_rules.batch_axes(mesh)
+    if cfg.dp_over_model and "model" in mesh.shape:
+        baxes = baxes + ("model",)
+    if shape is not None:
+        n_b = 1
+        for a in baxes:
+            n_b *= mesh.shape[a]
+        if shape.global_batch % max(n_b, 1) != 0:
+            baxes = ()  # e.g. long_500k batch=1: replicate batch
+    moe_axis = None
+    if cfg.num_experts and tp > 1 and cfg.num_experts % tp == 0:
+        moe_axis = "model"
+    seq_axes: tuple[str, ...] = ()
+    if shape is not None and shape.kind == "decode":
+        if shape.global_batch == 1:
+            # long-context: every axis shards the cache sequence (SP)
+            seq_axes = tuple(a for a in ("pod", "data", "model")
+                             if mesh.shape.get(a, 1) > 1)
+        elif tp > 1:
+            seq_axes = ("model",)
+        # the cache covers seq_len (+ the vlm image prefix); drop leading
+        # axes until the shard count divides the actual cache length
+        eff_len = shape.seq_len + (cfg.num_prefix_tokens or 0)
+        while seq_axes and eff_len % _axes_size(mesh, seq_axes) != 0:
+            seq_axes = seq_axes[1:]
+    act_seq = None
+    if (shape is not None and shape.kind in ("train", "prefill") and tp > 1
+            and shape.seq_len % tp == 0):
+        act_seq = "model"  # Megatron-SP for saved residual activations
+    moe_2d: tuple[str, ...] = ()
+    if (shape is not None and shape.kind == "decode" and moe_axis
+            and cfg.fsdp_axes):
+        # weight-stationary decode MoE: D stays sharded on the FSDP axes
+        moe_2d = tuple(a for a in cfg.fsdp_axes if a in mesh.shape)
+        if moe_2d and cfg.d_model % _axes_size(mesh, moe_2d) != 0:
+            moe_2d = ()
+    return DistCtx(mesh=mesh, batch_axes=baxes,
+                   tp_axis="model" if tp > 1 else None,
+                   seq_axes=seq_axes, moe_expert_axis=moe_axis,
+                   act_seq_axis=act_seq, moe_2d_axes=moe_2d)
+
+
+def _axes_size(mesh: Mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape.get(a, 1)
+    return n
+
+
+def _serve_cfg(cfg: ModelConfig) -> ModelConfig:
+    """Decode-time MoE must not drop tokens (tiny per-step token counts)."""
+    if cfg.num_experts:
+        return dataclasses.replace(
+            cfg, capacity_factor=float(cfg.num_experts
+                                       / max(cfg.experts_per_tok, 1)))
+    return cfg
+
+
+# ---------------------------------------------------------------------------
+# input structs (ShapeDtypeStruct only — no allocation)
+# ---------------------------------------------------------------------------
+def params_struct(cfg: ModelConfig) -> Params:
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(functools.partial(lm.init_params, cfg=cfg), key)
+
+
+def opt_state_struct(cfg: ModelConfig, pstruct: Params) -> Params:
+    init_opt, _ = make_optimizer(cfg.optimizer)
+    return jax.eval_shape(init_opt, pstruct)
+
+
+def batch_struct(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    out = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+           "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if cfg.frontend == "patch":
+        out["prefix_embed"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_prefix_tokens, cfg.d_model), jnp.float32)
+    if cfg.frontend == "frames":
+        out["frames"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.float32)
+    return out
+
+
+def cache_struct(cfg: ModelConfig, shape: ShapeConfig,
+                 pstruct: Params) -> Params:
+    """Decode-cache pytree of structs, via eval_shape on the real prefill."""
+    b, s = shape.global_batch, shape.seq_len
+    toks = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    kw = {}
+    if cfg.frontend == "patch":
+        kw["prefix_embed"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_prefix_tokens, cfg.d_model), jnp.float32)
+    if cfg.frontend == "frames":
+        kw["frames"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.float32)
+
+    def run(p, t, extra):
+        _, cache = lm.prefill(p, t, cfg, NO_CTX, max_len=s, **extra)
+        return cache
+
+    return jax.eval_shape(run, pstruct, toks, kw)
+
+
+def input_specs(arch_cfg: ModelConfig, shape_name: str) -> dict:
+    """All input structs for the step this shape lowers."""
+    shape = SHAPES[shape_name]
+    pstruct = params_struct(arch_cfg)
+    if shape.kind == "train":
+        return {"params": pstruct,
+                "opt_state": opt_state_struct(arch_cfg, pstruct),
+                "batch": batch_struct(arch_cfg, shape),
+                "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    if shape.kind == "prefill":
+        b = batch_struct(arch_cfg, shape)
+        del b["labels"]
+        return {"params": pstruct, **b}
+    # decode
+    return {"params": pstruct,
+            "cache": cache_struct(arch_cfg, shape, pstruct),
+            "token": jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+def default_micro_steps(cfg: ModelConfig, mesh: Mesh | None,
+                        shape: ShapeConfig) -> int:
+    """Gradient-accumulation factor.
+
+    Napkin rule: target ≤ ~4 examples × 4k tokens per device per
+    microbatch (keeps remat'd attention scores and MoE dispatch buffers in
+    budget), EXCEPT for ≥100B-param models, where the f32 grad-accumulation
+    buffer itself (4·N/devices bytes) would blow HBM — those run micro=1
+    and rely on sequence-sharded activations instead.
+    """
+    if mesh is None:
+        return 1
+    if cfg.num_experts * (cfg.moe_d_ff or cfg.d_ff) * cfg.d_model \
+            * cfg.num_layers * 3 > 60e9:          # ≥~100B params: no accum
+        return 1
+    n_b = 1
+    for a in make_ctx(cfg, mesh, shape).batch_axes:
+        n_b *= mesh.shape[a]
+    b_loc = max(shape.global_batch // max(n_b, 1), 1)
+    micro = 1
+    # B/micro must stay shardable over all n_b batch shards
+    while (b_loc // micro > 4 and micro < 8
+           and b_loc % (micro * 2) == 0
+           and (shape.global_batch // (micro * 2)) % max(n_b, 1) == 0):
+        micro *= 2
+    return micro
+
+
+def make_train_step(cfg: ModelConfig, mesh: Mesh | None, shape: ShapeConfig,
+                    micro_steps: int | None = None) -> Callable:
+    ctx = make_ctx(cfg, mesh, shape)
+    _, update = make_optimizer(cfg.optimizer)
+    micro = micro_steps or default_micro_steps(cfg, mesh, shape)
+
+    def lossf(p, mb):
+        return lm.loss_fn(p, mb, cfg, ctx)
+
+    def train_step(params, opt_state, batch, step):
+        if micro == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                lossf, has_aux=True)(params, batch)
+        else:
+            # microbatch along a *local* reshape of the batch dim:
+            # [B] → [B/micro, micro] keeps each shard's elements in place
+            # (no cross-shard reshuffle), scan slices column t.
+            def mb_slice(x, t):
+                xr = x.reshape(x.shape[0] // micro, micro, *x.shape[1:])
+                return jax.lax.dynamic_index_in_dim(xr, t, axis=1,
+                                                    keepdims=False)
+
+            def acc_step(carry, t):
+                gsum, lsum = carry
+                mb = jax.tree.map(lambda x: mb_slice(x, t), batch)
+                (loss, metrics), g = jax.value_and_grad(
+                    lossf, has_aux=True)(params, mb)
+                gsum = jax.tree.map(jnp.add, gsum, g)
+                return (gsum, lsum + loss), metrics
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (grads, loss_sum), metrics = jax.lax.scan(
+                acc_step, (g0, 0.0), jnp.arange(micro))
+            grads = jax.tree.map(lambda g: g / micro, grads)
+            loss = loss_sum / micro
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+        lr_scale = schedule.warmup_cosine(step)
+        params2, opt2, om = update(params, grads, opt_state, lr_scale)
+        return params2, opt2, {"loss": loss, **metrics, **om}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh | None,
+                      shape: ShapeConfig) -> Callable:
+    ctx = make_ctx(cfg, mesh, shape)
+    scfg = _serve_cfg(cfg)
+
+    def prefill_step(params, tokens, **extras):
+        logits, cache = lm.prefill(params, tokens, scfg, ctx,
+                                   max_len=shape.seq_len, **extras)
+        return logits[:, -1], cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, mesh: Mesh | None,
+                    shape: ShapeConfig) -> Callable:
+    ctx = make_ctx(cfg, mesh, shape)
+    scfg = _serve_cfg(cfg)
+
+    def serve_step(params, cache, token):
+        logits, cache = lm.decode_step(params, cache, token, scfg, ctx)
+        return logits, cache
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# sharding plans per cell
+# ---------------------------------------------------------------------------
+def shardings_for(cfg: ModelConfig, mesh: Mesh, shape_name: str,
+                  specs: dict) -> dict:
+    shape = SHAPES[shape_name]
+    ctx = make_ctx(cfg, mesh, shape)
+    out: dict[str, Any] = {
+        "params": shard_rules.param_shardings(specs["params"], cfg, mesh)}
+    if shape.kind == "train":
+        out["opt_state"] = shard_rules.opt_state_shardings(
+            specs["opt_state"], specs["params"], cfg, mesh)
+        bspec = {}
+        for k, v in specs["batch"].items():
+            axes = ctx.batch_axes
+            bspec[k] = NamedSharding(
+                mesh, P(axes, *([None] * (v.ndim - 1))) if axes else P())
+        out["batch"] = bspec
+        out["step"] = NamedSharding(mesh, P())
+    elif shape.kind == "prefill":
+        axes = ctx.batch_axes
+        for k, v in specs.items():
+            if k == "params":
+                continue
+            out[k] = NamedSharding(
+                mesh, P(axes, *([None] * (v.ndim - 1))) if axes else P())
+    else:
+        out["cache"] = shard_rules.cache_shardings(
+            specs["cache"], mesh, ctx.seq_axes, baxes=ctx.batch_axes, cfg=cfg)
+        axes = ctx.batch_axes
+        out["token"] = NamedSharding(mesh, P(axes, None) if axes else P())
+    return out
+
+
+def lowerable(cfg: ModelConfig, mesh: Mesh, shape_name: str):
+    """→ (jitted fn, ordered arg structs, in_shardings) for this cell."""
+    shape = SHAPES[shape_name]
+    specs = input_specs(cfg, shape_name)
+    shards = shardings_for(cfg, mesh, shape_name, specs)
+    if shape.kind == "train":
+        fn = make_train_step(cfg, mesh, shape)
+        order = ["params", "opt_state", "batch", "step"]
+    elif shape.kind == "prefill":
+        fn = make_prefill_step(cfg, mesh, shape)
+        order = [k for k in ("params", "tokens", "prefix_embed", "frames")
+                 if k in specs]
+        base = fn
+        if cfg.frontend == "patch":
+            fn = lambda p, t, pe: base(p, t, prefix_embed=pe)
+        elif cfg.frontend == "frames":
+            fn = lambda p, t, fr: base(p, t, frames=fr)
+    else:
+        fn = make_serve_step(cfg, mesh, shape)
+        order = ["params", "cache", "token"]
+    args = tuple(specs[k] for k in order)
+    in_shardings = tuple(shards[k] for k in order)
+    return fn, args, in_shardings

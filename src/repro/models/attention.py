@@ -1,0 +1,191 @@
+"""Attention: GQA/MQA/MHA with RoPE — full, chunked (online-softmax),
+decode-with-cache, and sequence-parallel (sharded-cache) decode.
+
+Layouts (TPU-friendly: head_dim minor, lane-aligned):
+  q:        [B, S, H, hd]
+  k, v:     [B, S, K, hd]          (K = kv heads; H % K == 0)
+  cache:    {"k": [B, Smax, K, hd], "v": ..., } position scalar in caller
+
+The chunked path is the XLA analogue of flash attention (O(S·chunk)
+activation memory) used for 32k prefill; the Pallas flash kernel in
+``repro.kernels.flash_attention`` is the TPU-target variant of the same
+math and is validated against :func:`full_attention`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init, rope_angles
+
+NEG_INF = -1e30
+Params = Any
+
+
+# -- params -------------------------------------------------------------------
+def attn_init(key, d_model: int, num_heads: int, num_kv_heads: int,
+              head_dim: int, dtype, stack: tuple[int, ...] = ()) -> Params:
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (*stack, d_model, num_heads * head_dim), dtype),
+        "wk": dense_init(ks[1], (*stack, d_model, num_kv_heads * head_dim), dtype),
+        "wv": dense_init(ks[2], (*stack, d_model, num_kv_heads * head_dim), dtype),
+        "wo": dense_init(ks[3], (*stack, num_heads * head_dim, d_model), dtype),
+    }
+
+
+def qkv_proj(p: Params, x: jnp.ndarray, num_heads: int, num_kv_heads: int,
+             head_dim: int):
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,de->bse", x, p["wq"]).reshape(b, s, num_heads, head_dim)
+    k = jnp.einsum("bsd,de->bse", x, p["wk"]).reshape(b, s, num_kv_heads, head_dim)
+    v = jnp.einsum("bsd,de->bse", x, p["wv"]).reshape(b, s, num_kv_heads, head_dim)
+    return q, k, v
+
+
+def out_proj(p: Params, o: jnp.ndarray) -> jnp.ndarray:
+    b, s, h, hd = o.shape
+    return jnp.einsum("bse,ed->bsd", o.reshape(b, s, h * hd), p["wo"])
+
+
+def _group(q: jnp.ndarray, num_kv_heads: int) -> jnp.ndarray:
+    """[B,S,H,hd] → [B,S,K,G,hd] with G = H//K query groups per kv head."""
+    b, s, h, hd = q.shape
+    return q.reshape(b, s, num_kv_heads, h // num_kv_heads, hd)
+
+
+# -- full attention (small/medium S) -----------------------------------------
+def full_attention(q, k, v, causal: bool = True,
+                   q_offset: int | jnp.ndarray = 0,
+                   prefix_len: int = 0) -> jnp.ndarray:
+    """q [B,Sq,H,hd], k/v [B,Sk,K,hd] → [B,Sq,H,hd].
+
+    ``prefix_len`` > 0 gives prefix-LM masking (bidirectional over the first
+    ``prefix_len`` keys, causal after) — the PaliGemma image-prefix scheme.
+    """
+    b, sq, h, hd = q.shape
+    kheads = k.shape[2]
+    qg = _group(q, kheads).astype(jnp.float32)
+    scale = hd ** -0.5
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg * scale,
+                        k.astype(jnp.float32))
+    if causal:
+        qpos = q_offset + jnp.arange(sq)[:, None]
+        kpos = jnp.arange(k.shape[1])[None, :]
+        visible = (qpos >= kpos) | (kpos < prefix_len)
+        scores = jnp.where(visible, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bkgst,btkd->bskgd", probs, v.astype(jnp.float32))
+    return o.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+# -- chunked attention: online softmax over KV chunks -------------------------
+def chunked_attention(q, k, v, causal: bool = True, chunk: int = 1024,
+                      q_offset: int | jnp.ndarray = 0,
+                      prefix_len: int = 0) -> jnp.ndarray:
+    """Flash-style O(Sq·chunk) memory; math identical to full_attention."""
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    kheads = k.shape[2]
+    if sk % chunk != 0:
+        return full_attention(q, k, v, causal, q_offset, prefix_len)
+    nchunk = sk // chunk
+    qg = _group(q, kheads).astype(jnp.float32) * hd ** -0.5
+    g = h // kheads
+    kc = k.reshape(b, nchunk, chunk, kheads, hd)
+    vc = v.reshape(b, nchunk, chunk, kheads, hd)
+
+    def step(carry, inputs):
+        m, l, acc = carry                   # m,l: [b,k,g,sq]; acc: [b,s,k,g,d]
+        kb, vb, cidx = inputs
+        scores = jnp.einsum("bskgd,btkd->bkgst", qg, kb.astype(jnp.float32))
+        if causal:
+            qpos = q_offset + jnp.arange(sq)[:, None]
+            kpos = cidx * chunk + jnp.arange(chunk)[None, :]
+            visible = (qpos >= kpos) | (kpos < prefix_len)
+            scores = jnp.where(visible, scores, NEG_INF)
+        m_new = jnp.maximum(m, scores.max(axis=-1))
+        p = jnp.exp(scores - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bkgst,btkd->bskgd", p, vb.astype(jnp.float32))
+        acc_new = acc * jnp.moveaxis(corr, -1, 1)[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kheads, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kheads, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, sq, kheads, g, hd), jnp.float32)
+    # checkpoint the chunk step: backward recomputes per-chunk scores
+    # instead of stashing [nchunk, b, k, g, sq, chunk] f32 residuals.
+    (m, l, acc), _ = jax.lax.scan(
+        jax.checkpoint(step,
+                       policy=jax.checkpoint_policies.nothing_saveable),
+        (m0, l0, a0),
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), jnp.arange(nchunk)))
+    out = acc / jnp.maximum(jnp.moveaxis(l, -1, 1), 1e-30)[..., None]
+    return out.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def attention(q, k, v, causal: bool = True, q_offset=0, prefix_len: int = 0,
+              chunk_threshold: int = 2048, chunk: int = 1024) -> jnp.ndarray:
+    if k.shape[1] > chunk_threshold:
+        return chunked_attention(q, k, v, causal, chunk, q_offset, prefix_len)
+    return full_attention(q, k, v, causal, q_offset, prefix_len)
+
+
+# -- decode (one new token against a cache) -----------------------------------
+def init_cache(batch: int, max_len: int, num_kv_heads: int, head_dim: int,
+               dtype) -> dict:
+    return {"k": jnp.zeros((batch, max_len, num_kv_heads, head_dim), dtype),
+            "v": jnp.zeros((batch, max_len, num_kv_heads, head_dim), dtype)}
+
+
+def update_cache(cache: dict, k_new, v_new, pos) -> dict:
+    """Insert [B,1,K,hd] at position ``pos`` (scalar int32)."""
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, pos, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, pos, axis=1)
+    return {"k": k, "v": v}
+
+
+def decode_attention(q, cache: dict, cur_len) -> jnp.ndarray:
+    """q [B,1,H,hd]; attends to cache[:cur_len+...]; pos mask by cur_len."""
+    b, _, h, hd = q.shape
+    kheads = cache["k"].shape[2]
+    qg = _group(q, kheads).astype(jnp.float32) * hd ** -0.5
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg,
+                        cache["k"].astype(jnp.float32))
+    kpos = jnp.arange(cache["k"].shape[1])[None, :]
+    scores = jnp.where(kpos < cur_len, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bkgst,btkd->bskgd", probs,
+                   cache["v"].astype(jnp.float32))
+    return o.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+# -- sequence-parallel decode: cache sharded along S ---------------------------
+def sp_decode_attention(q, k_shard, v_shard, cur_len, axes,
+                        shard_index, shard_len) -> jnp.ndarray:
+    """Flash-decoding combine across cache shards (runs inside shard_map).
+
+    q [B,1,H,hd] (replicated over ``axes``); k/v_shard [B,S_loc,K,hd];
+    ``shard_index``·``shard_len`` gives this shard's global position offset.
+    Partial softmax per shard, then max/psum combine over ``axes``.
+    """
+    b, _, h, hd = q.shape
+    kheads = k_shard.shape[2]
+    qg = _group(q, kheads).astype(jnp.float32) * hd ** -0.5
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg,
+                        k_shard.astype(jnp.float32))
+    kpos = shard_index * shard_len + jnp.arange(shard_len)[None, :]
+    scores = jnp.where(kpos < cur_len, scores, NEG_INF)
+    m = scores.max(axis=-1)                         # [b,k,g,1]
+    m_glob = jax.lax.pmax(m, axes)
+    p = jnp.exp(scores - m_glob[..., None])
+    l = jax.lax.psum(p.sum(axis=-1), axes)
+    pv = jnp.einsum("bkgst,btkd->bskgd", p, v_shard.astype(jnp.float32))
+    pv = jax.lax.psum(pv, axes)
+    out = pv / jnp.maximum(jnp.moveaxis(l, -1, 1), 1e-30)[..., None]
+    return out.reshape(b, 1, h, hd).astype(q.dtype)

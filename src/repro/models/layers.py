@@ -1,0 +1,132 @@
+"""Common model layers: norms, embeddings, RoPE, MLP — pure-function style.
+
+Params are plain dict pytrees; every layer is `fn(params, x, ...) -> y`.
+Initializers return stacked-[L] block params where noted so the stacks can
+be scanned (critical for 512-device compile times).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+def _dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[name]
+
+
+# -- init helpers -----------------------------------------------------------
+def dense_init(key, shape, dtype, scale: float | None = None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+# -- RMSNorm ---------------------------------------------------------------
+def rmsnorm_init(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# -- rotary position embeddings ---------------------------------------------
+def rope_angles(positions: jnp.ndarray, head_dim: int,
+                theta: float) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """positions [...S] → cos/sin [...S, head_dim//2] (f32)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x [..., S, n, head_dim]; cos/sin broadcastable [..., S, 1, hd/2]."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    x32_1, x32_2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    o1 = x32_1 * cos - x32_2 * sin
+    o2 = x32_2 * cos + x32_1 * sin
+    return jnp.concatenate([o1, o2], axis=-1).astype(x.dtype)
+
+
+# -- MLP ---------------------------------------------------------------------
+def mlp_init(key, d_model: int, d_ff: int, dtype, glu: bool,
+             stack: tuple[int, ...] = ()) -> Params:
+    ks = jax.random.split(key, 3)
+    shape_in = (*stack, d_model, d_ff)
+    shape_out = (*stack, d_ff, d_model)
+    p = {"wi": dense_init(ks[0], shape_in, dtype),
+         "wo": dense_init(ks[1], shape_out, dtype)}
+    if glu:
+        p["wg"] = dense_init(ks[2], shape_in, dtype)
+    return p
+
+
+GLU_ACTIVATIONS = ("silu_glu", "gelu_glu")
+
+
+def is_glu(activation: str) -> bool:
+    return activation in GLU_ACTIVATIONS
+
+
+def mlp(p: Params, x: jnp.ndarray, activation: str) -> jnp.ndarray:
+    h = jnp.einsum("...d,df->...f", x, p["wi"])
+    if is_glu(activation):
+        g = jnp.einsum("...d,df->...f", x, p["wg"])
+        act = jax.nn.silu if activation == "silu_glu" else jax.nn.gelu
+        h = act(g) * h
+    elif activation == "gelu":
+        h = jax.nn.gelu(h)
+    elif activation == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        raise ValueError(activation)
+    return jnp.einsum("...f,fd->...d", h, p["wo"])
+
+
+# -- embedding / unembedding --------------------------------------------------
+def embedding_init(key, vocab: int, d_model: int, dtype) -> Params:
+    return {"table": embed_init(key, (vocab, d_model), dtype)}
+
+
+def embed(p: Params, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def unembed(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    """Logits in f32 (loss numerics)."""
+    return jnp.einsum("...d,vd->...v", x.astype(jnp.float32),
+                      p["table"].astype(jnp.float32))
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Mean next-token CE; logits [..., V] f32, labels [...] int32.
+
+    The gold logit is extracted with an iota==label mask-reduce rather than
+    take_along_axis: on a vocab-sharded logits tensor the masked reduce
+    stays local + one psum, whereas a gather along the sharded dim would
+    all-gather the full logits (GB-scale at 32k seq).
+    """
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    vocab = logits.shape[-1]
+    onehot = (labels[..., None] ==
+              jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1))
+    gold = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,161 @@
+"""LM wrapper: embeddings → stack → norm → logits, plus the three entry
+points the launcher lowers (``train_step`` comes from optim/train):
+
+  * ``loss_fn(params, batch)``            — next-token CE (+ MoE aux)
+  * ``prefill(params, tokens, ...)``      — full-seq forward + decode cache
+  * ``decode_step(params, cache, token)`` — one token, cache update
+
+Modality frontends ([vlm]/[audio]) are STUBS per the assignment: callers
+provide precomputed patch/frame embeddings (`prefix_embed` / `frames`);
+a learned linear adapter projects them into d_model. The transformer
+backbone is real.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import (cross_entropy, dense_init, embed,
+                                 embedding_init, rmsnorm, unembed)
+from repro.models.transformer import (DistCtx, NO_CTX, embed_lookup,
+                                      encoder_apply, stack_apply,
+                                      stack_decode, stack_init,
+                                      stack_prefill, unembed_sharded)
+
+Params = Any
+AUX_COEF = 0.01
+
+
+def _pdtype(cfg: ModelConfig):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+
+
+# ---------------------------------------------------------------------------
+def init_params(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    dt = _pdtype(cfg)
+    p = {
+        "embed": embedding_init(ks[0], cfg.vocab_size, cfg.d_model, dt),
+        "stack": stack_init(ks[1], cfg),
+        "ln_f": {"scale": jnp.ones((cfg.d_model,), dt)},
+    }
+    if cfg.frontend is not None:
+        # stub adapter: frontend embeddings arrive at d_model width already
+        p["adapter"] = dense_init(ks[2], (cfg.d_model, cfg.d_model), dt)
+    return p
+
+
+def _embed_inputs(params, cfg: ModelConfig, tokens, prefix_embed=None,
+                  ctx: DistCtx = NO_CTX):
+    h = embed_lookup(params["embed"], tokens, ctx)
+    prefix_len = 0
+    if cfg.frontend is not None and prefix_embed is not None:
+        pre = jnp.einsum("bsd,de->bse", prefix_embed.astype(h.dtype),
+                         params["adapter"])
+        h = jnp.concatenate([pre, h], axis=1)
+        prefix_len = pre.shape[1]
+    return h, prefix_len
+
+
+# -- training loss ------------------------------------------------------------
+def loss_fn(params: Params, batch: dict, cfg: ModelConfig,
+            ctx: DistCtx = NO_CTX) -> tuple[jnp.ndarray, dict]:
+    """batch: tokens [B,S], labels [B,S] (+ prefix_embed / frames)."""
+    tokens, labels = batch["tokens"], batch["labels"]
+    if cfg.family == "audio":
+        enc_h = jnp.einsum("bsd,de->bse",
+                           batch["frames"].astype(_pdtype(cfg)),
+                           params["adapter"])
+        enc_out = encoder_apply(params["stack"], enc_h, cfg, ctx)
+        h = embed_lookup(params["embed"], tokens, ctx)
+        h, aux = stack_apply(params["stack"], h, cfg, ctx, enc_out=enc_out)
+    else:
+        h, prefix_len = _embed_inputs(params, cfg, tokens,
+                                      batch.get("prefix_embed"), ctx)
+        h, aux = stack_apply(params["stack"], h, cfg, ctx,
+                             prefix_len=prefix_len)
+        if prefix_len:
+            h = h[:, prefix_len:]
+    h = rmsnorm(params["ln_f"], h, cfg.norm_eps)
+    logits = unembed_sharded(params["embed"], h, ctx)
+    ce = cross_entropy(logits, labels)
+    loss = ce + AUX_COEF * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+# -- serving ------------------------------------------------------------------
+def prefill(params: Params, tokens, cfg: ModelConfig, ctx: DistCtx = NO_CTX,
+            max_len: int | None = None, prefix_embed=None, frames=None):
+    """→ (logits [B, S, V], cache)."""
+    if cfg.family == "audio":
+        enc_h = jnp.einsum("bsd,de->bse", frames.astype(_pdtype(cfg)),
+                           params["adapter"])
+        enc_out = encoder_apply(params["stack"], enc_h, cfg, ctx)
+        h = embed_lookup(params["embed"], tokens, ctx)
+        h, cache = stack_prefill(params["stack"], h, cfg, ctx,
+                                 max_len=max_len, enc_out=enc_out)
+    else:
+        h, prefix_len = _embed_inputs(params, cfg, tokens, prefix_embed, ctx)
+        # ``max_len`` is the *text-token* cache budget; the image/frame
+        # prefix occupies its own additional slots.
+        if max_len is not None:
+            max_len = max_len + prefix_len
+        h, cache = stack_prefill(params["stack"], h, cfg, ctx,
+                                 max_len=max_len, prefix_len=prefix_len)
+        if prefix_len:
+            h = h[:, prefix_len:]
+    h = rmsnorm(params["ln_f"], h, cfg.norm_eps)
+    logits = unembed_sharded(params["embed"], h, ctx)
+    return logits, cache
+
+
+def decode_step(params: Params, cache, token, cfg: ModelConfig,
+                ctx: DistCtx = NO_CTX):
+    """token [B, 1] int32 → (logits [B, 1, V], new cache)."""
+    h = embed_lookup(params["embed"], token, ctx)
+    h, cache = stack_decode(params["stack"], h, cache, cfg, ctx)
+    h = rmsnorm(params["ln_f"], h, cfg.norm_eps)
+    logits = unembed_sharded(params["embed"], h, ctx)
+    return logits, cache
+
+
+def greedy_generate(params: Params, prompt, cfg: ModelConfig,
+                    ctx: DistCtx = NO_CTX, steps: int = 8,
+                    max_len: int | None = None, **front):
+    """Small-scale convenience driver (examples + tests)."""
+    b, s = prompt.shape
+    max_len = max_len or (s + steps)
+    logits, cache = prefill(params, prompt, cfg, ctx, max_len=max_len,
+                            **front)
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(prompt.dtype)
+    out = [tok]
+    for _ in range(steps - 1):
+        logits, cache = decode_step(params, cache, tok, cfg, ctx)
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(prompt.dtype)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)
+
+
+# -- parameter counting (roofline MODEL_FLOPS) --------------------------------
+def param_count(params: Params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+def active_param_count(params: Params, cfg: ModelConfig) -> int:
+    """Per-token active params: MoE experts count k/E; everything else full."""
+    if cfg.num_experts == 0:
+        return param_count(params)
+    total = 0
+    frac = cfg.experts_per_tok / cfg.num_experts
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    for path, leaf in flat:
+        keys = [getattr(k, "key", str(k)) for k in path]
+        if "moe" in keys and "router" not in keys:
+            total += int(leaf.size * frac)
+        else:
+            total += leaf.size
+    return total

@@ -1,0 +1,230 @@
+"""Mixture-of-Experts: top-k routing with capacity-based, sort-driven
+dispatch.
+
+Two execution paths:
+
+* :func:`moe_dense` — compute every expert for every token, mask-combine.
+  O(E/k) FLOP waste; used for tiny smoke configs and as the naive baseline
+  the perf log compares against.
+* :func:`moe_grouped` — production path (runs inside ``shard_map``):
+  tokens grouped per data shard (the GShard "group" = local token set),
+  experts sharded over the ``model`` axis.  Dispatch is sort-based (argsort
+  by expert id + capacity clamp) into a [E_local, C, D] buffer — no
+  [G,S,E,C] one-hot monsters — followed by grouped einsums and a
+  scatter-add combine, finishing with one psum over the expert axis (the
+  same collective a Megatron TP FFN needs, so EP costs no extra all-to-all
+  in this layout).
+
+Router is f32 for numerics; aux load-balance loss returned alongside.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+Params = Any
+
+
+def moe_init(key, d_model: int, num_experts: int, d_ff: int, dtype,
+             glu: bool = True, stack: tuple[int, ...] = ()) -> Params:
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": dense_init(ks[0], (*stack, d_model, num_experts),
+                             jnp.float32),
+        "wi": dense_init(ks[1], (*stack, num_experts, d_model, d_ff), dtype),
+        "wo": dense_init(ks[2], (*stack, num_experts, d_ff, d_model), dtype),
+    }
+    if glu:
+        p["wg"] = dense_init(ks[3], (*stack, num_experts, d_model, d_ff),
+                             dtype)
+    return p
+
+
+def _expert_ffn(p: Params, h: jnp.ndarray, activation: str) -> jnp.ndarray:
+    """h [..., E, C, D] with per-expert weights [..., E, D, F]."""
+    up = jnp.einsum("...ecd,...edf->...ecf", h, p["wi"])
+    if activation in ("silu_glu", "gelu_glu"):
+        g = jnp.einsum("...ecd,...edf->...ecf", h, p["wg"])
+        act = jax.nn.silu if activation == "silu_glu" else jax.nn.gelu
+        up = act(g) * up
+    elif activation == "gelu":
+        up = jax.nn.gelu(up)
+    elif activation == "relu2":
+        up = jnp.square(jax.nn.relu(up))
+    return jnp.einsum("...ecf,...efd->...ecd", up, p["wo"])
+
+
+def _route(p: Params, x: jnp.ndarray, k: int):
+    """x [T, D] → gates [T, k] (f32, normalized), idx [T, k], aux loss."""
+    logits = x.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance aux: E · Σ_e fraction_e · prob_e
+    e = probs.shape[-1]
+    hard = jnp.zeros_like(probs).at[
+        jnp.arange(probs.shape[0])[:, None], idx].set(1.0)
+    aux = e * jnp.mean(hard.mean(0) * probs.mean(0)) * e
+    return gates, idx, aux
+
+
+def moe_dense(p: Params, x: jnp.ndarray, k: int, activation: str):
+    """All-experts path: x [B, S, D] → (y, aux)."""
+    b, s, d = x.shape
+    xt = x.reshape(b * s, d)
+    gates, idx, aux = _route(p, xt, k)
+    e = p["router"].shape[-1]
+    ys = []
+    for ei in range(e):  # static small E in smoke configs
+        pe = {kk: v[ei] for kk, v in p.items() if kk != "router"}
+        up = xt @ pe["wi"]
+        if activation in ("silu_glu", "gelu_glu"):
+            act = jax.nn.silu if activation == "silu_glu" else jax.nn.gelu
+            up = act(xt @ pe["wg"]) * up
+        elif activation == "gelu":
+            up = jax.nn.gelu(up)
+        elif activation == "relu2":
+            up = jnp.square(jax.nn.relu(up))
+        ys.append(up @ pe["wo"])
+    stack = jnp.stack(ys, axis=1)                   # [T, E, D]
+    mask = jnp.zeros((b * s, e), stack.dtype).at[
+        jnp.arange(b * s)[:, None], idx].set(gates.astype(stack.dtype))
+    y = jnp.einsum("te,ted->td", mask, stack)
+    return y.reshape(b, s, d), aux
+
+
+def grouped_dispatch_local(x_flat: jnp.ndarray, gates, idx, num_experts: int,
+                           e_start, e_local: int, capacity: int):
+    """Sort-based dispatch of local tokens into this shard's expert buffers.
+
+    x_flat [T, D]; returns (buf [E_local, C, D], per-slot destinations
+    [T, k]).  Runs identically on every expert shard (tokens replicated
+    over the expert axis); each shard keeps only its expert range.
+
+    Memory discipline: all D-wide data movement is k scatters of x_flat
+    itself — no ``x_flat[tok]`` style [T·k, D] gather ever materializes
+    (at kimi scale that intermediate alone is 7.5 GB f32 per device).
+    Only int32 [T·k] index vectors are built.
+    """
+    t, d = x_flat.shape
+    k = idx.shape[-1]
+    fe = idx.reshape(-1)                       # [T·k] expert of each slot
+    order = jnp.argsort(fe)                    # stable
+    se = fe[order]
+    # position within expert segment (same on all shards — global capacity)
+    seg_start = jnp.searchsorted(se, se, side="left")
+    pos = jnp.arange(t * k) - seg_start
+    local_e = se - e_start
+    keep = (pos < capacity) & (local_e >= 0) & (local_e < e_local)
+    trash = e_local * capacity                 # one discard row
+    dest_sorted = jnp.where(keep, local_e * capacity + pos, trash)
+    # slot-original destinations: dest_orig[order[p]] = dest_sorted[p]
+    dest_tj = (jnp.zeros(t * k, jnp.int32).at[order].set(dest_sorted)
+               .reshape(t, k))
+    buf = jnp.zeros((trash + 1, d), x_flat.dtype)
+    for j in range(k):  # static k: scatter whole token rows, no gather
+        buf = buf.at[dest_tj[:, j]].set(x_flat, mode="drop")
+    return buf[:-1].reshape(e_local, capacity, d), dest_tj
+
+
+def grouped_combine_local(buf_out: jnp.ndarray, gates, dest_tj: jnp.ndarray,
+                          t: int):
+    """Gather-weighted sum of expert outputs back to token slots
+    (pre-psum partial). Dropped slots hit the zero trash row."""
+    e_local, capacity, d = buf_out.shape
+    flat = jnp.concatenate(
+        [buf_out.reshape(e_local * capacity, d),
+         jnp.zeros((1, d), buf_out.dtype)], axis=0)
+    y = jnp.zeros((t, d), buf_out.dtype)
+    k = dest_tj.shape[-1]
+    for j in range(k):  # k gathers of [T, D] — bounded live set
+        y = y + flat[dest_tj[:, j]] * gates[:, j, None].astype(buf_out.dtype)
+    return y
+
+
+def moe_grouped_2d(p: Params, x_dshard: jnp.ndarray, k: int,
+                   activation: str, expert_axis: str,
+                   inner_axes: tuple[str, ...]):
+    """Weight-stationary (2-D TP) MoE for DECODE (call inside shard_map).
+
+    Per-step decode moves O(B·D) activations but the FSDP formulation
+    gathers O(E_loc·D·F) expert weights every layer — at kimi scale 2.1 GB
+    of weight traffic per layer per token batch (§Perf hillclimb #2).
+    Here the weights stay exactly as stored, [E→expert_axis,
+    D→inner_axes, F], and the *activations* are reduced instead:
+
+      x [B,1,D/inner] (D-sharded, replicated over batch axes) →
+      dispatch local D-slices → partial up/gate [E_loc, C, F]
+      → psum(inner) (tens of MB) → act → y_buf [E_loc, C, D/inner] local
+      → combine → psum(expert) → y [B, 1, D/inner].
+
+    Router runs replicated on the full (small) token set.
+    """
+    b, s, d_loc = x_dshard.shape
+    e = p["router"].shape[-1]
+    e_local = p["wi"].shape[0]
+    xt = x_dshard.reshape(b * s, d_loc)
+    # router arrives D-sharded [d_loc, E] → partial logits + psum(inner)
+    logits = jax.lax.psum(xt.astype(jnp.float32) @ p["router"], inner_axes)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    capacity = b * s  # decode: zero drops by construction
+    e_start = jax.lax.axis_index(expert_axis) * e_local
+    buf, dest_tj = grouped_dispatch_local(xt, gates, idx, e, e_start,
+                                          e_local, capacity)
+    # weights arrive as stored: wi/wg [E_loc, d_loc, F], wo [E_loc, F, d_loc]
+    up = jax.lax.psum(jnp.einsum("ecd,edf->ecf", buf, p["wi"]), inner_axes)
+    if activation in ("silu_glu", "gelu_glu"):
+        g = jax.lax.psum(jnp.einsum("ecd,edf->ecf", buf, p["wg"]),
+                         inner_axes)
+        act = jax.nn.silu if activation == "silu_glu" else jax.nn.gelu
+        up = act(g) * up
+    elif activation == "gelu":
+        up = jax.nn.gelu(up)
+    elif activation == "relu2":
+        up = jnp.square(jax.nn.relu(up))
+    y_buf = jnp.einsum("ecf,efd->ecd", up, p["wo"])
+    y = grouped_combine_local(y_buf, gates, dest_tj, b * s)
+    y = jax.lax.psum(y, expert_axis)
+    aux = jnp.zeros((), jnp.float32)
+    return y.reshape(b, s, d_loc), aux
+
+
+def moe_grouped_local(p: Params, x_local: jnp.ndarray, k: int,
+                      activation: str, capacity_factor: float,
+                      expert_axis: str | None) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-shard MoE body (call inside shard_map; or directly with
+    expert_axis=None for single-shard execution).
+
+    x_local [B_loc, S, D] — this data shard's tokens (replicated over the
+    expert axis).  p["wi"/"wg"/"wo"] [E_local, D, F] — this expert shard's
+    weights.  p["router"] [D, E] replicated.
+    """
+    b, s, d = x_local.shape
+    e = p["router"].shape[-1]
+    e_local = p["wi"].shape[0]
+    xt = x_local.reshape(b * s, d)
+    gates, idx, aux = _route(p, xt, k)
+    # capacity-based dropping (Switch/GShard semantics): tokens routed past
+    # an expert's capacity are dropped — so outputs are (correctly) a
+    # function of the co-batched token set, like any capacity-MoE serving.
+    capacity = max(-(-b * s * k * capacity_factor // e), 1)
+    capacity = int(min(capacity, b * s))
+    if expert_axis is None:
+        e_start = 0
+    else:
+        e_start = jax.lax.axis_index(expert_axis) * e_local
+    buf, dest_tj = grouped_dispatch_local(xt, gates, idx, e, e_start,
+                                          e_local, capacity)
+    buf_out = _expert_ffn(p, buf[None], activation)[0]
+    y = grouped_combine_local(buf_out, gates, dest_tj, b * s)
+    if expert_axis is not None:
+        y = jax.lax.psum(y, expert_axis)
+        aux = jax.lax.pmean(aux, expert_axis)
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,287 @@
+"""Selective state-space blocks: Mamba-1 (falcon-mamba) and Mamba-2 (zamba2).
+
+Training path uses a *chunked associative scan*: the sequence is processed
+in chunks of ``chunk`` tokens; within a chunk the linear recurrence
+
+    h_t = a_t ⊙ h_{t-1} + b_t          (a_t = exp(Δ_t·A), b_t = Δ_t·B_t·x_t)
+
+is evaluated with ``jax.lax.associative_scan`` (pairs compose as
+(a2,b2)∘(a1,b1) = (a1·a2, a2·b1+b2)), and an outer ``lax.scan`` threads the
+boundary state h between chunks — so only [B, chunk, ...] state tensors ever
+materialize (the TPU-shaped equivalent of the CUDA selective-scan kernel).
+
+Decode path carries (conv_state, h) and costs O(1) per token — this is what
+makes long_500k native for the ssm/hybrid architectures.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rmsnorm, rmsnorm_init
+
+Params = Any
+
+
+# -- shared pieces ------------------------------------------------------------
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv: x [B,S,C], w [C,W] → [B,S,C] (SiLU applied)."""
+    width = w.shape[-1]
+    acc = x * w[:, -1]
+    for i in range(1, width):  # small static W (4): unrolled shifts
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :-i]
+        acc = acc + shifted * w[:, -1 - i]
+    return jax.nn.silu(acc + b)
+
+
+def _conv_step(conv_state: jnp.ndarray, x_new: jnp.ndarray, w: jnp.ndarray,
+               b: jnp.ndarray):
+    """conv_state [B, W-1, C], x_new [B, 1, C] → (y [B,1,C], new_state)."""
+    window = jnp.concatenate([conv_state, x_new], axis=1)      # [B, W, C]
+    y = jnp.einsum("bwc,cw->bc", window, w)[:, None]
+    return jax.nn.silu(y + b), window[:, 1:]
+
+
+def _assoc(pair1, pair2):
+    a1, b1 = pair1
+    a2, b2 = pair2
+    return a1 * a2, a2 * b1 + b2
+
+
+def chunked_linear_scan(a: jnp.ndarray, b: jnp.ndarray, h0: jnp.ndarray,
+                        chunk: int):
+    """h_t = a_t·h_{t-1} + b_t over axis 1 of [B, S, ...]; returns (h_seq, h_last).
+
+    Peak live state is [B, chunk, ...] regardless of S.
+
+    ``a`` may have broadcast (size-1) trailing dims relative to ``b`` —
+    mamba2's per-head scalar decay stays [B, S, nh, 1, 1] all the way
+    through the associative scan (a·a products keep the factored shape),
+    which is a 4096× traffic saving over materializing it at b's shape
+    (§Perf hillclimb #1).
+    """
+    bsz, s = a.shape[:2]
+    if s % chunk != 0:
+        chunk = s  # degenerate fallback for odd smoke shapes
+    n = s // chunk
+    ar = a.reshape(bsz, n, chunk, *a.shape[2:])
+    br = b.reshape(bsz, n, chunk, *b.shape[2:])
+
+    def outer(h, ab):
+        ac, bc = ab                                    # [B, chunk, ...]
+        a_cum, b_cum = jax.lax.associative_scan(_assoc, (ac, bc), axis=1)
+        h_seq = a_cum * h[:, None] + b_cum             # states for each t
+        return h_seq[:, -1], h_seq
+
+    h_last, h_all = jax.lax.scan(
+        outer, h0, (jnp.moveaxis(ar, 1, 0), jnp.moveaxis(br, 1, 0)))
+    h_all = jnp.moveaxis(h_all, 0, 1).reshape(bsz, s, *b.shape[2:])
+    return h_all, h_last
+
+
+def fused_chunk_scan(dt: jnp.ndarray, a_mat, xw: jnp.ndarray,
+                     b_seq: jnp.ndarray, c_seq: jnp.ndarray,
+                     h0: jnp.ndarray, chunk: int, per_head: bool):
+    """Streaming selective scan: y_t = C_t · h_t with
+    h_t = exp(dt_t·A) ⊙ h_{t-1} + (dt_t·x_t) ⊗ B_t.
+
+    The [*, state_dims, N] decay/outer-product tensors are built *inside*
+    the chunk loop from the small streamed inputs (dt, x, B, C) and die
+    with the chunk — the full [B, S, ..., N] state sequence is NEVER
+    materialized (it is 64–1365× the size of x; materializing it was the
+    dominant memory/traffic term of the naive path — §Perf hillclimb #1).
+
+    per_head=False (mamba1): dt,xw [B,S,Di]; a_mat [Di,N]; y [B,S,Di].
+    per_head=True  (mamba2): dt [B,S,nh], xw [B,S,nh,hd]; a_mat [nh];
+                             y [B,S,nh,hd]. b/c_seq [B,S,N] (G=1).
+    """
+    bsz, s = dt.shape[:2]
+    if s % chunk != 0:
+        chunk = s
+    n_chunks = s // chunk
+
+    def chunkify(x):
+        return jnp.moveaxis(
+            x.reshape(bsz, n_chunks, chunk, *x.shape[2:]), 1, 0)
+
+    def step(h, xs):
+        dt_c, xw_c, b_c, c_c = xs
+        if per_head:
+            decay = jnp.exp(dt_c * a_mat)[..., None, None]   # [B,C,nh,1,1]
+            bx = (dt_c[..., None] * xw_c)[..., None] * b_c[:, :, None, None, :]
+        else:
+            decay = jnp.exp(dt_c[..., None] * a_mat)         # [B,C,Di,N]
+            bx = (dt_c * xw_c)[..., None] * b_c[:, :, None, :]
+        a_cum, b_cum = jax.lax.associative_scan(_assoc, (decay, bx), axis=1)
+        h_seq = a_cum * h[:, None] + b_cum
+        if per_head:
+            y = jnp.einsum("bchdn,bcn->bchd", h_seq, c_c)
+        else:
+            y = jnp.einsum("bcdn,bcn->bcd", h_seq, c_c)
+        return h_seq[:, -1], y
+
+    step = jax.checkpoint(step,
+                          policy=jax.checkpoint_policies.nothing_saveable)
+    h_last, y = jax.lax.scan(
+        step, h0, (chunkify(dt), chunkify(xw), chunkify(b_seq),
+                   chunkify(c_seq)))
+    y = jnp.moveaxis(y, 0, 1).reshape(bsz, s, *y.shape[3:])
+    return y, h_last
+
+
+# -- Mamba-1 (falcon-mamba) ----------------------------------------------------
+def mamba1_init(key, d_model: int, d_inner: int, d_state: int, d_conv: int,
+                dtype, stack: tuple[int, ...] = ()) -> Params:
+    dt_rank = max(d_model // 16, 1)
+    ks = jax.random.split(key, 8)
+    return {
+        "in_proj": dense_init(ks[0], (*stack, d_model, 2 * d_inner), dtype),
+        "conv_w": dense_init(ks[1], (*stack, d_inner, d_conv), dtype,
+                             scale=1.0 / math.sqrt(d_conv)),
+        "conv_b": jnp.zeros((*stack, d_inner), dtype),
+        "x_proj": dense_init(ks[2], (*stack, d_inner, dt_rank + 2 * d_state),
+                             dtype),
+        "dt_w": dense_init(ks[3], (*stack, dt_rank, d_inner), dtype),
+        "dt_b": jnp.full((*stack, d_inner), -4.6, jnp.float32),  # softplus≈0.01
+        "A_log": jnp.broadcast_to(
+            jnp.log(jnp.arange(1, d_state + 1, dtype=jnp.float32)),
+            (*stack, d_inner, d_state)).copy(),
+        "D": jnp.ones((*stack, d_inner), jnp.float32),
+        "out_proj": dense_init(ks[4], (*stack, d_inner, d_model), dtype),
+    }
+
+
+def _mamba1_ssm_inputs(p: Params, xc: jnp.ndarray, d_state: int):
+    dt_rank = p["dt_w"].shape[-2]
+    xdb = jnp.einsum("bsc,ce->bse", xc, p["x_proj"]).astype(jnp.float32)
+    dt_low, b_ssm, c_ssm = jnp.split(xdb, [dt_rank, dt_rank + d_state], -1)
+    dt = jax.nn.softplus(dt_low @ p["dt_w"].astype(jnp.float32) + p["dt_b"])
+    a_mat = -jnp.exp(p["A_log"])                       # [Di, N]
+    return dt, a_mat, b_ssm, c_ssm
+
+
+def mamba1(p: Params, x: jnp.ndarray, d_state: int,
+           chunk: int = 256) -> jnp.ndarray:
+    """Full-sequence forward: x [B, S, D] → [B, S, D]."""
+    bsz, s, _ = x.shape
+    d_inner = p["conv_w"].shape[-2]
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    xc = _causal_conv(x_in, p["conv_w"], p["conv_b"])
+    dt, a_mat, b_ssm, c_ssm = _mamba1_ssm_inputs(p, xc, d_state)
+    xc32 = xc.astype(jnp.float32)
+    h0 = jnp.zeros((bsz, d_inner, d_state), jnp.float32)
+    y, _ = fused_chunk_scan(dt, a_mat, xc32, b_ssm, c_ssm, h0, chunk,
+                            per_head=False)
+    y = y + p["D"] * xc32
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+
+
+def mamba1_init_state(p: Params, batch: int) -> dict:
+    d_inner, d_conv = p["conv_w"].shape[-2:]
+    d_state = p["A_log"].shape[-1]
+    return {"conv": jnp.zeros((batch, d_conv - 1, d_inner), p["conv_w"].dtype),
+            "h": jnp.zeros((batch, d_inner, d_state), jnp.float32)}
+
+
+def mamba1_step(p: Params, x: jnp.ndarray, state: dict, d_state: int):
+    """Decode: x [B, 1, D] → (y [B, 1, D], new state). O(1) in context len."""
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_new = _conv_step(state["conv"], x_in, p["conv_w"], p["conv_b"])
+    dt, a_mat, b_ssm, c_ssm = _mamba1_ssm_inputs(p, xc, d_state)
+    xc32 = xc.astype(jnp.float32)
+    decay = jnp.exp(dt[:, 0, :, None] * a_mat)               # [B,Di,N]
+    bx = (dt[:, 0] * xc32[:, 0])[..., None] * b_ssm[:, 0, None, :]
+    h = decay * state["h"] + bx
+    y = jnp.einsum("bdn,bn->bd", h, c_ssm[:, 0]) + p["D"] * xc32[:, 0]
+    y = y[:, None].astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, {"conv": conv_new, "h": h}
+
+
+# -- Mamba-2 (zamba2) -----------------------------------------------------------
+def mamba2_init(key, d_model: int, d_inner: int, d_state: int, d_conv: int,
+                head_dim: int, dtype, stack: tuple[int, ...] = ()) -> Params:
+    nheads = d_inner // head_dim
+    conv_dim = d_inner + 2 * d_state          # conv over (x, B, C)
+    ks = jax.random.split(key, 6)
+    return {
+        # in_proj → [z (Di), x (Di), B (N), C (N), dt (nheads)]
+        "in_proj": dense_init(ks[0], (*stack, d_model,
+                                      2 * d_inner + 2 * d_state + nheads),
+                              dtype),
+        "conv_w": dense_init(ks[1], (*stack, conv_dim, d_conv), dtype,
+                             scale=1.0 / math.sqrt(d_conv)),
+        "conv_b": jnp.zeros((*stack, conv_dim), dtype),
+        "dt_b": jnp.full((*stack, nheads), -4.6, jnp.float32),
+        "A_log": jnp.zeros((*stack, nheads), jnp.float32),
+        "D": jnp.ones((*stack, nheads), jnp.float32),
+        "norm": jnp.ones((*stack, d_inner), dtype),
+        "out_proj": dense_init(ks[2], (*stack, d_inner, d_model), dtype),
+    }
+
+
+def _mamba2_split(p: Params, x: jnp.ndarray, d_inner: int, d_state: int):
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xbc, dt_raw = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * d_state],
+                               axis=-1)
+    return z, xbc, dt_raw
+
+
+def mamba2(p: Params, x: jnp.ndarray, d_state: int, head_dim: int,
+           chunk: int = 256, eps: float = 1e-5) -> jnp.ndarray:
+    bsz, s, _ = x.shape
+    d_inner = p["out_proj"].shape[-2]
+    nheads = d_inner // head_dim
+    z, xbc, dt_raw = _mamba2_split(p, x, d_inner, d_state)
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs, b_ssm, c_ssm = jnp.split(xbc, [d_inner, d_inner + d_state], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_b"])  # [B,S,nh]
+    a = -jnp.exp(p["A_log"])                                      # [nh]
+    xh = xs.astype(jnp.float32).reshape(bsz, s, nheads, head_dim)
+    h0 = jnp.zeros((bsz, nheads, head_dim, d_state), jnp.float32)
+    y, _ = fused_chunk_scan(dt, a, xh, b_ssm.astype(jnp.float32),
+                            c_ssm.astype(jnp.float32), h0, chunk,
+                            per_head=True)
+    y = y + p["D"][:, None] * xh
+    y = y.reshape(bsz, s, d_inner)
+    y = rmsnorm({"scale": p["norm"]}, y.astype(x.dtype), eps)
+    y = y * jax.nn.silu(z)
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+
+
+def mamba2_init_state(p: Params, batch: int, d_state: int,
+                      head_dim: int) -> dict:
+    d_inner = p["out_proj"].shape[-2]
+    conv_dim, d_conv = p["conv_w"].shape[-2:]
+    nheads = d_inner // head_dim
+    return {"conv": jnp.zeros((batch, d_conv - 1, conv_dim), p["conv_w"].dtype),
+            "h": jnp.zeros((batch, nheads, head_dim, d_state), jnp.float32)}
+
+
+def mamba2_step(p: Params, x: jnp.ndarray, state: dict, d_state: int,
+                head_dim: int, eps: float = 1e-5):
+    bsz = x.shape[0]
+    d_inner = p["out_proj"].shape[-2]
+    nheads = d_inner // head_dim
+    z, xbc, dt_raw = _mamba2_split(p, x, d_inner, d_state)
+    xbc, conv_new = _conv_step(state["conv"], xbc, p["conv_w"], p["conv_b"])
+    xs, b_ssm, c_ssm = jnp.split(xbc, [d_inner, d_inner + d_state], axis=-1)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_b"])
+    a = -jnp.exp(p["A_log"])
+    xh = xs[:, 0].astype(jnp.float32).reshape(bsz, nheads, head_dim)
+    decay = jnp.exp(dt * a)[..., None, None]
+    bx = (dt[..., None] * xh)[..., None] * b_ssm[:, 0, None, None, :]
+    h = decay * state["h"] + bx
+    y = jnp.einsum("bhdn,bn->bhd", h, c_ssm[:, 0].astype(jnp.float32))
+    y = y + p["D"][:, None] * xh
+    y = y.reshape(bsz, 1, d_inner)
+    y = rmsnorm({"scale": p["norm"]}, y.astype(x.dtype), eps)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, {"conv": conv_new, "h": h}

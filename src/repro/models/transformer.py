@@ -1,0 +1,664 @@
+"""Transformer/SSM/hybrid stacks with scan-over-layers.
+
+Every stack keeps block params stacked on a leading layer axis and scans —
+one HLO block body regardless of depth, which is what keeps 512-device
+compiles tractable for 61-layer-MoE / 64-layer-SSM configs.
+
+Three execution modes per family:
+  * ``apply``   — full-sequence forward (train / prefill-without-cache);
+  * ``prefill`` — full-sequence forward that also emits the decode cache;
+  * ``decode``  — one token against the cache (cache as scan xs/ys).
+
+The distribution context :class:`DistCtx` carries the mesh + axis names the
+blocks need for the shard_map sub-regions (grouped MoE, SP decode
+attention); with ``mesh=None`` everything runs single-device (smoke tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.attention import (attn_init, attention, decode_attention,
+                                    out_proj, qkv_proj, sp_decode_attention,
+                                    update_cache)
+from repro.models.layers import (apply_rope, is_glu, mlp, mlp_init,
+                                 rmsnorm, rmsnorm_init, rope_angles)
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class DistCtx:
+    """Distribution context threaded through the blocks."""
+    mesh: Any = None
+    batch_axes: tuple[str, ...] = ()
+    tp_axis: str | None = None
+    seq_axes: tuple[str, ...] = ()      # SP axes for the decode cache
+    moe_expert_axis: str | None = None  # expert-sharding axis (usually tp)
+    act_seq_axis: str | None = None     # Megatron-SP: shard saved residual
+                                        # activations along sequence over TP
+    moe_2d_axes: tuple[str, ...] = ()   # decode: weight-stationary 2-D TP —
+                                        # expert D dim stays sharded on these
+
+    @property
+    def manual(self) -> bool:
+        return self.mesh is not None
+
+    def axis_size(self, axes) -> int:
+        if self.mesh is None:
+            return 1
+        n = 1
+        for a in (axes if isinstance(axes, tuple) else (axes,)):
+            n *= self.mesh.shape[a]
+        return n
+
+
+NO_CTX = DistCtx()
+
+
+# ===========================================================================
+# embedding lookup (sharded)
+# ===========================================================================
+def embed_lookup(p_embed: Params, tokens: jnp.ndarray, ctx: DistCtx):
+    """Token embedding with vocab-sharded table.
+
+    Under a mesh, a plain ``take`` on a V-sharded table backprops through a
+    scatter-add that XLA materializes as the FULL [V, D] gradient per
+    device (4.7 GB f32 at kimi scale).  The shard_map version does a
+    masked local lookup + psum, so the adjoint is a *local* [V/tp, D]
+    scatter — sharded by construction.
+    """
+    from repro.models.layers import embed
+    tp = ctx.axis_size(ctx.tp_axis) if ctx.tp_axis else 1
+    v = p_embed["table"].shape[0]
+    if not ctx.manual or tp <= 1 or v % tp:
+        return embed(p_embed, tokens)
+    ax = ctx.tp_axis
+    bspec = ctx.batch_axes if ctx.batch_axes else None
+
+    def body(tab_l, tok_l):
+        v_loc = tab_l.shape[0]
+        start = jax.lax.axis_index(ax) * v_loc
+        loc = tok_l - start
+        ok = (loc >= 0) & (loc < v_loc)
+        h = jnp.take(tab_l, jnp.clip(loc, 0, v_loc - 1), axis=0)
+        h = jnp.where(ok[..., None], h, jnp.zeros((), h.dtype))
+        return jax.lax.psum(h, ax)
+
+    return shard_map(
+        body, mesh=ctx.mesh,
+        in_specs=(P(ax, None), P(bspec, None)),
+        out_specs=P(bspec, None, None), check_vma=False)(
+            p_embed["table"], tokens)
+
+
+def unembed_sharded(p_embed: Params, x: jnp.ndarray, ctx: DistCtx):
+    """Logits against a vocab-sharded table; logits stay V-sharded.
+
+    Keeps the f32 table cast AND the table gradient local to each vocab
+    shard — under plain pjit the partitioner resolved the three uses of the
+    table (embed, unembed, grads) to a replicated full [V, D] f32 copy per
+    device (≈19 GB at kimi scale)."""
+    from repro.models.layers import unembed
+    tp = ctx.axis_size(ctx.tp_axis) if ctx.tp_axis else 1
+    v = p_embed["table"].shape[0]
+    if not ctx.manual or tp <= 1 or v % tp:
+        return unembed(p_embed, x)
+    ax = ctx.tp_axis
+    bspec = ctx.batch_axes if ctx.batch_axes else None
+
+    def body(tab_l, x_l):
+        return jnp.einsum("...d,vd->...v", x_l.astype(jnp.float32),
+                          tab_l.astype(jnp.float32))
+
+    return shard_map(
+        body, mesh=ctx.mesh,
+        in_specs=(P(ax, None), P(bspec, None, None)),
+        out_specs=P(bspec, None, ax), check_vma=False)(
+            p_embed["table"], x)
+
+
+# ===========================================================================
+# attention sub-block
+# ===========================================================================
+def _rope(cfg: ModelConfig, positions):
+    return rope_angles(positions, cfg.resolved_head_dim, cfg.rope_theta)
+
+
+def attn_apply(p: Params, h: jnp.ndarray, cfg: ModelConfig, causal: bool,
+               prefix_len: int = 0, with_cache: bool = False):
+    """Full-sequence attention with RoPE. Returns y (+ (k, v) if caching)."""
+    b, s, _ = h.shape
+    hd = cfg.resolved_head_dim
+    q, k, v = qkv_proj(p, h, cfg.num_heads, cfg.num_kv_heads, hd)
+    cos, sin = _rope(cfg, jnp.arange(s))
+    q = apply_rope(q, cos[:, None], sin[:, None])
+    k = apply_rope(k, cos[:, None], sin[:, None])
+    o = attention(q, k, v, causal=causal, prefix_len=prefix_len)
+    y = out_proj(p, o)
+    return (y, (k, v)) if with_cache else y
+
+
+def attn_decode(p: Params, h: jnp.ndarray, cache: dict, pos, cfg: ModelConfig,
+                ctx: DistCtx):
+    """One-token attention against a cache [B, Smax, K, hd]."""
+    hd = cfg.resolved_head_dim
+    q, k, v = qkv_proj(p, h, cfg.num_heads, cfg.num_kv_heads, hd)
+    cos, sin = _rope(cfg, pos[None] if jnp.ndim(pos) == 0 else pos)
+    q = apply_rope(q, cos[:, None], sin[:, None])
+    k = apply_rope(k, cos[:, None], sin[:, None])
+    if ctx.manual and ctx.seq_axes:
+        o, cache = _sp_decode(q, k, v, cache, pos, ctx)
+    else:
+        cache = update_cache(cache, k, v, pos)
+        o = decode_attention(q, cache, pos + 1)
+    return out_proj(p, o), cache
+
+
+def _sp_decode(q, k_new, v_new, cache, pos, ctx: DistCtx):
+    """Sequence-parallel cache update + flash-decoding combine (shard_map)."""
+    axes = ctx.seq_axes
+    n_shards = ctx.axis_size(axes)
+    shard_len = cache["k"].shape[1] // n_shards
+    bspec = P(ctx.batch_axes) if ctx.batch_axes else P()
+    qspec = P(*( (ctx.batch_axes,) if ctx.batch_axes else (None,) ), None, None, None)
+    cspec = P(*( (ctx.batch_axes,) if ctx.batch_axes else (None,) ), axes, None, None)
+
+    def body(q_l, kn_l, vn_l, kc_l, vc_l, pos_l):
+        idx = 0
+        for a in axes:
+            idx = idx * ctx.mesh.shape[a] + jax.lax.axis_index(a)
+        local = pos_l - idx * shard_len
+        in_range = (local >= 0) & (local < shard_len)
+        upd = jnp.clip(local, 0, shard_len - 1)
+        kc2 = jax.lax.dynamic_update_slice_in_dim(kc_l, kn_l, upd, axis=1)
+        vc2 = jax.lax.dynamic_update_slice_in_dim(vc_l, vn_l, upd, axis=1)
+        kc2 = jnp.where(in_range, kc2, kc_l)
+        vc2 = jnp.where(in_range, vc2, vc_l)
+        o = sp_decode_attention(q_l, kc2, vc2, pos_l + 1, axes, idx, shard_len)
+        return o, kc2, vc2
+
+    o, kc, vc = shard_map(
+        body, mesh=ctx.mesh,
+        in_specs=(qspec, qspec, qspec, cspec, cspec, P()),
+        out_specs=(qspec, cspec, cspec), check_vma=False)(
+            q, k_new, v_new, cache["k"], cache["v"], pos)
+    return o, {"k": kc, "v": vc}
+
+
+# ===========================================================================
+# FFN sub-block (dense MLP / MoE with optional shared path)
+# ===========================================================================
+def ffn_apply(p: Params, h: jnp.ndarray, cfg: ModelConfig, ctx: DistCtx):
+    """Returns (y, aux)."""
+    if cfg.num_experts == 0:
+        return mlp(p["mlp"], h, cfg.activation), jnp.zeros((), jnp.float32)
+    y, aux = _moe_apply(p["moe"], h, cfg, ctx)
+    if cfg.num_shared_experts > 0:
+        y = y + mlp(p["shared"], h, cfg.activation)
+    return y, aux
+
+
+def _moe_apply(p: Params, h: jnp.ndarray, cfg: ModelConfig, ctx: DistCtx):
+    k = cfg.experts_per_tok
+    if not (ctx.manual and ctx.moe_expert_axis):
+        return moe_mod.moe_grouped_local(p, h, k, cfg.activation,
+                                         cfg.capacity_factor, None)
+    if ctx.moe_2d_axes:
+        return _moe_apply_2d(p, h, cfg, ctx)
+    ax = ctx.moe_expert_axis
+    bspec = P(*( (ctx.batch_axes,) if ctx.batch_axes else (None,) ), None, None)
+    espec = {"router": P(None, None),
+             "wi": P(ax, None, None), "wo": P(ax, None, None)}
+    if "wg" in p:
+        espec["wg"] = P(ax, None, None)
+
+    def body(p_l, h_l):
+        return moe_mod.moe_grouped_local(p_l, h_l, k, cfg.activation,
+                                         cfg.capacity_factor, ax)
+
+    return shard_map(body, mesh=ctx.mesh, in_specs=(espec, bspec),
+                     out_specs=(bspec, P()), check_vma=False)(p, h)
+
+
+def _moe_apply_2d(p: Params, h: jnp.ndarray, cfg: ModelConfig, ctx: DistCtx):
+    """Decode-time weight-stationary MoE: expert weights stay sharded on
+    BOTH the expert axis and their FSDP D axes; tiny per-token activations
+    are psum'd instead of gathering GBs of expert weights per layer
+    (§Perf hillclimb #2 — see moe.moe_grouped_2d)."""
+    ax = ctx.moe_expert_axis
+    inner = ctx.moe_2d_axes
+    espec = {"router": P(inner, None),
+             "wi": P(ax, inner, None), "wo": P(ax, None, inner)}
+    if "wg" in p:
+        espec["wg"] = P(ax, inner, None)
+    xspec = P(None, None, inner)
+
+    def body(p_l, h_l):
+        return moe_mod.moe_grouped_2d(p_l, h_l, cfg.experts_per_tok,
+                                      cfg.activation, ax, inner)
+
+    return shard_map(body, mesh=ctx.mesh, in_specs=(espec, xspec),
+                     out_specs=(xspec, P()), check_vma=False)(p, h)
+
+
+# ===========================================================================
+# dense / moe / vlm block
+# ===========================================================================
+def dense_block_init(key, cfg: ModelConfig, stack: tuple[int, ...],
+                     cross: bool = False) -> Params:
+    ks = jax.random.split(key, 6)
+    dt = _pdtype(cfg)
+    p = {
+        "ln1": {"scale": jnp.ones((*stack, cfg.d_model), dt)},
+        "attn": attn_init(ks[0], cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                          cfg.resolved_head_dim, dt, stack),
+        "ln2": {"scale": jnp.ones((*stack, cfg.d_model), dt)},
+    }
+    if cross:
+        p["lnx"] = {"scale": jnp.ones((*stack, cfg.d_model), dt)}
+        p["xattn"] = attn_init(ks[1], cfg.d_model, cfg.num_heads,
+                               cfg.num_kv_heads, cfg.resolved_head_dim, dt,
+                               stack)
+    if cfg.num_experts:
+        p["moe"] = moe_mod.moe_init(ks[2], cfg.d_model, cfg.num_experts,
+                                    cfg.moe_d_ff or cfg.d_ff, dt,
+                                    is_glu(cfg.activation), stack)
+        if cfg.num_shared_experts:
+            p["shared"] = mlp_init(
+                ks[3], cfg.d_model,
+                cfg.num_shared_experts * (cfg.moe_d_ff or cfg.d_ff), dt,
+                is_glu(cfg.activation), stack)
+    else:
+        p["mlp"] = mlp_init(ks[4], cfg.d_model, cfg.d_ff, dt,
+                            is_glu(cfg.activation), stack)
+    return p
+
+
+def _pdtype(cfg: ModelConfig):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+
+
+def dense_block_apply(p, h, cfg: ModelConfig, ctx: DistCtx, causal=True,
+                      prefix_len: int = 0, with_cache=False):
+    a_in = rmsnorm(p["ln1"], h, cfg.norm_eps)
+    out = attn_apply(p["attn"], a_in, cfg, causal, prefix_len, with_cache)
+    y, kv = out if with_cache else (out, None)
+    h = h + y
+    f_in = rmsnorm(p["ln2"], h, cfg.norm_eps)
+    y, aux = ffn_apply(p, f_in, cfg, ctx)
+    h = h + y
+    h = _constrain_h(h, ctx)
+    return (h, aux, kv) if with_cache else (h, aux)
+
+
+def dense_block_decode(p, h, cache, pos, cfg: ModelConfig, ctx: DistCtx):
+    a_in = rmsnorm(p["ln1"], h, cfg.norm_eps)
+    y, cache = attn_decode(p["attn"], a_in, cache, pos, cfg, ctx)
+    h = h + y
+    f_in = rmsnorm(p["ln2"], h, cfg.norm_eps)
+    y, _ = ffn_apply(p, f_in, cfg, ctx)
+    return h + y, cache
+
+
+def _constrain_h(h, ctx: DistCtx):
+    """Residual-stream sharding between blocks.
+
+    With ``act_seq_axis`` set (training), the saved activation is ALSO
+    sharded along sequence over the TP axis — Megatron sequence
+    parallelism.  Under ``remat`` the per-layer saved tensor is exactly
+    this constrained one, cutting checkpointed bytes by the TP degree; XLA
+    inserts the all-gather before attention and the reduce-scatter after
+    the FFN, which is the textbook SP collective schedule.
+    """
+    if not (ctx.manual and (ctx.batch_axes or ctx.act_seq_axis)):
+        return h
+    bspec = ctx.batch_axes if ctx.batch_axes else None
+    sspec = ctx.act_seq_axis
+    if sspec is not None and h.shape[1] % ctx.axis_size(sspec) != 0:
+        sspec = None
+    return jax.lax.with_sharding_constraint(
+        h, jax.sharding.NamedSharding(ctx.mesh, P(bspec, sspec, None)))
+
+
+# ===========================================================================
+# ssm block (mamba1/2 + residual)
+# ===========================================================================
+def ssm_block_init(key, cfg: ModelConfig, stack: tuple[int, ...]) -> Params:
+    dt = _pdtype(cfg)
+    if cfg.ssm_version == 1:
+        mix = ssm_mod.mamba1_init(key, cfg.d_model, cfg.d_inner,
+                                  cfg.ssm_state, cfg.ssm_conv, dt,
+                                  stack=stack)
+    else:
+        mix = ssm_mod.mamba2_init(key, cfg.d_model, cfg.d_inner,
+                                  cfg.ssm_state, cfg.ssm_conv,
+                                  cfg.ssm_head_dim, dt, stack=stack)
+    return {
+        "ln": {"scale": jnp.ones((*stack, cfg.d_model), dt)},
+        "mix": mix,
+    }
+
+
+def ssm_block_apply(p, h, cfg: ModelConfig, ctx: DistCtx = NO_CTX):
+    x = rmsnorm(p["ln"], h, cfg.norm_eps)
+    if cfg.ssm_version == 1:
+        y = ssm_mod.mamba1(p["mix"], x, cfg.ssm_state)
+    else:
+        y = ssm_mod.mamba2(p["mix"], x, cfg.ssm_state, cfg.ssm_head_dim)
+    return _constrain_h(h + y, ctx)
+
+
+def ssm_block_prefill(p, h, cfg: ModelConfig):
+    """Apply + emit decode state (conv tail + final h)."""
+    x = rmsnorm(p["ln"], h, cfg.norm_eps)
+    if cfg.ssm_version == 1:
+        y, state = _mamba1_with_state(p["mix"], x, cfg)
+    else:
+        y, state = _mamba2_with_state(p["mix"], x, cfg)
+    return h + y, state
+
+
+def ssm_block_decode(p, h, state, cfg: ModelConfig):
+    x = rmsnorm(p["ln"], h, cfg.norm_eps)
+    if cfg.ssm_version == 1:
+        y, state = ssm_mod.mamba1_step(p["mix"], x, state, cfg.ssm_state)
+    else:
+        y, state = ssm_mod.mamba2_step(p["mix"], x, state, cfg.ssm_state,
+                                       cfg.ssm_head_dim)
+    return h + y, state
+
+
+def _mamba1_with_state(p, x, cfg: ModelConfig):
+    # replicate mamba1() but keep the boundary state (prefill path)
+    b, s, _ = x.shape
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    xc = ssm_mod._causal_conv(x_in, p["conv_w"], p["conv_b"])
+    dt, a_mat, b_ssm, c_ssm = ssm_mod._mamba1_ssm_inputs(p, xc, cfg.ssm_state)
+    xc32 = xc.astype(jnp.float32)
+    h0 = jnp.zeros((b, cfg.d_inner, cfg.ssm_state), jnp.float32)
+    y, h_last = ssm_mod.fused_chunk_scan(dt, a_mat, xc32, b_ssm, c_ssm, h0,
+                                         256, per_head=False)
+    y = y + p["D"] * xc32
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    conv_tail = _conv_tail(x_in, cfg.ssm_conv)
+    return out, {"conv": conv_tail, "h": h_last}
+
+
+def _mamba2_with_state(p, x, cfg: ModelConfig):
+    b, s, _ = x.shape
+    d_inner, n, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_head_dim
+    nheads = d_inner // hd
+    z, xbc_raw, dt_raw = ssm_mod._mamba2_split(p, x, d_inner, n)
+    xbc = ssm_mod._causal_conv(xbc_raw, p["conv_w"], p["conv_b"])
+    xs, b_ssm, c_ssm = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+    dtv = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_b"])
+    a = -jnp.exp(p["A_log"])
+    xh = xs.astype(jnp.float32).reshape(b, s, nheads, hd)
+    h0 = jnp.zeros((b, nheads, hd, n), jnp.float32)
+    y, h_last = ssm_mod.fused_chunk_scan(
+        dtv, a, xh, b_ssm.astype(jnp.float32), c_ssm.astype(jnp.float32),
+        h0, 256, per_head=True)
+    y = (y + p["D"][:, None] * xh).reshape(b, s, d_inner)
+    y = rmsnorm({"scale": p["norm"]}, y.astype(x.dtype), cfg.norm_eps)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, {"conv": _conv_tail(xbc_raw, cfg.ssm_conv), "h": h_last}
+
+
+def _conv_tail(x_in: jnp.ndarray, width: int) -> jnp.ndarray:
+    pad = jnp.pad(x_in, ((0, 0), (width - 1, 0), (0, 0)))
+    return pad[:, pad.shape[1] - (width - 1):]
+
+
+# ===========================================================================
+# stacks
+# ===========================================================================
+def _remat(f, cfg: ModelConfig):
+    if cfg.remat == "block":
+        return jax.checkpoint(f, policy=jax.checkpoint_policies.nothing_saveable)
+    return f
+
+
+def stack_init(key, cfg: ModelConfig) -> Params:
+    """Stacked block params for the decoder stack of any family."""
+    if cfg.family in ("dense", "moe", "vlm"):
+        return {"blocks": dense_block_init(key, cfg, (cfg.num_layers,))}
+    if cfg.family == "ssm":
+        return {"blocks": ssm_block_init(key, cfg, (cfg.num_layers,))}
+    if cfg.family == "hybrid":
+        k1, k2 = jax.random.split(key)
+        groups = cfg.num_layers // cfg.attn_every
+        return {
+            "blocks": ssm_block_init(k1, cfg, (groups, cfg.attn_every)),
+            "shared_attn": dense_block_init(k2, cfg, ()),  # ONE shared block
+        }
+    if cfg.family == "audio":
+        k1, k2 = jax.random.split(key)
+        return {
+            "enc_blocks": dense_block_init(k1, cfg,
+                                           (cfg.num_encoder_layers,)),
+            "blocks": dense_block_init(k2, cfg, (cfg.num_layers,),
+                                       cross=True),
+        }
+    raise ValueError(cfg.family)
+
+
+# -- full-sequence apply ------------------------------------------------------
+def stack_apply(params: Params, h: jnp.ndarray, cfg: ModelConfig,
+                ctx: DistCtx, prefix_len: int = 0,
+                enc_out: jnp.ndarray | None = None):
+    """→ (h, aux_sum). Train-mode forward for every family."""
+    if cfg.family in ("dense", "moe", "vlm"):
+        def body(carry, p_l):
+            hh, aux = carry
+            hh, a = dense_block_apply(p_l, hh, cfg, ctx, True, prefix_len)
+            return (hh, aux + a), None
+        (h, aux), _ = jax.lax.scan(_remat(body, cfg), (h, 0.0),
+                                   params["blocks"])
+        return h, aux
+
+    if cfg.family == "ssm":
+        def body(carry, p_l):
+            return _remat(lambda c, p: (ssm_block_apply(p, c, cfg, ctx),
+                                        None), cfg)(carry, p_l)
+        h, _ = jax.lax.scan(body, h, params["blocks"])
+        return h, jnp.zeros((), jnp.float32)
+
+    if cfg.family == "hybrid":
+        shared = params["shared_attn"]
+
+        def group(carry, p_g):
+            hh = carry
+            def inner(c, p_l):
+                return ssm_block_apply(p_l, c, cfg, ctx), None
+            hh, _ = jax.lax.scan(inner, hh, p_g)
+            hh, _ = dense_block_apply(shared, hh, cfg, ctx, True)
+            return hh, None
+        h, _ = jax.lax.scan(_remat(group, cfg), h, params["blocks"])
+        return h, jnp.zeros((), jnp.float32)
+
+    if cfg.family == "audio":
+        assert enc_out is not None
+        def body(carry, p_l):
+            hh, aux = carry
+            hh, a = _cross_block_apply(p_l, hh, enc_out, cfg, ctx)
+            return (hh, aux + a), None
+        (h, aux), _ = jax.lax.scan(_remat(body, cfg), (h, 0.0),
+                                   params["blocks"])
+        return h, aux
+    raise ValueError(cfg.family)
+
+
+def encoder_apply(params: Params, h: jnp.ndarray, cfg: ModelConfig,
+                  ctx: DistCtx) -> jnp.ndarray:
+    """Bidirectional encoder stack (audio family)."""
+    def body(carry, p_l):
+        hh, _ = dense_block_apply(p_l, carry, cfg, ctx, causal=False)
+        return hh, None
+    h, _ = jax.lax.scan(_remat(body, cfg), h, params["enc_blocks"])
+    return h
+
+
+def _cross_block_apply(p, h, enc_out, cfg: ModelConfig, ctx: DistCtx,
+                       with_cache: bool = False):
+    a_in = rmsnorm(p["ln1"], h, cfg.norm_eps)
+    out = attn_apply(p["attn"], a_in, cfg, causal=True, with_cache=with_cache)
+    y, kv = out if with_cache else (out, None)
+    h = h + y
+    x_in = rmsnorm(p["lnx"], h, cfg.norm_eps)
+    hd = cfg.resolved_head_dim
+    q, _, _ = qkv_proj(p["xattn"], x_in, cfg.num_heads, cfg.num_kv_heads, hd)
+    ek, ev = _cross_kv(p["xattn"], enc_out, cfg)
+    o = attention(q, ek, ev, causal=False)
+    h = h + out_proj(p["xattn"], o)
+    f_in = rmsnorm(p["ln2"], h, cfg.norm_eps)
+    y, aux = ffn_apply(p, f_in, cfg, ctx)
+    h = _constrain_h(h + y, ctx)
+    if with_cache:
+        return h, aux, (kv, (ek, ev))
+    return h, aux
+
+
+def _cross_kv(p, enc_out, cfg: ModelConfig):
+    hd = cfg.resolved_head_dim
+    b, s, _ = enc_out.shape
+    ek = jnp.einsum("bsd,de->bse", enc_out, p["wk"]).reshape(
+        b, s, cfg.num_kv_heads, hd)
+    ev = jnp.einsum("bsd,de->bse", enc_out, p["wv"]).reshape(
+        b, s, cfg.num_kv_heads, hd)
+    return ek, ev
+
+
+# -- prefill (emit cache) -----------------------------------------------------
+def stack_prefill(params, h, cfg: ModelConfig, ctx: DistCtx,
+                  max_len: int | None = None, prefix_len: int = 0,
+                  enc_out=None):
+    """→ (h, cache). Cache k/v padded to ``max_len`` (≥ S)."""
+    b, s, _ = h.shape
+    max_len = max_len or s
+    pad = max_len - s
+
+    def pad_kv(kv):
+        k, v = kv
+        if pad:
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return {"k": k, "v": v}
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def body(carry, p_l):
+            hh, aux = carry
+            hh, a, kv = dense_block_apply(p_l, hh, cfg, ctx, True,
+                                          prefix_len, with_cache=True)
+            return (hh, aux + a), pad_kv(kv)
+        (h, _), cache = jax.lax.scan(body, (h, 0.0), params["blocks"])
+        return h, {"layers": cache, "pos": jnp.int32(s)}
+
+    if cfg.family == "ssm":
+        def body(carry, p_l):
+            hh, st = ssm_block_prefill(p_l, carry, cfg)
+            return hh, st
+        h, states = jax.lax.scan(body, h, params["blocks"])
+        return h, {"layers": states, "pos": jnp.int32(s)}
+
+    if cfg.family == "hybrid":
+        shared = params["shared_attn"]
+
+        def group(carry, p_g):
+            hh = carry
+            def inner(c, p_l):
+                return ssm_block_prefill(p_l, c, cfg)
+            hh, sts = jax.lax.scan(inner, hh, p_g)
+            hh, _, kv = dense_block_apply(shared, hh, cfg, ctx, True,
+                                          with_cache=True)
+            return hh, (sts, pad_kv(kv))
+        h, (mamba_st, attn_st) = jax.lax.scan(group, h, params["blocks"])
+        return h, {"mamba": mamba_st, "attn": attn_st, "pos": jnp.int32(s)}
+
+    if cfg.family == "audio":
+        def body(carry, p_l):
+            hh, aux = carry
+            hh, a, (kv, xkv) = _cross_block_apply(p_l, hh, enc_out, cfg, ctx,
+                                                  with_cache=True)
+            return (hh, aux + a), (pad_kv(kv), {"k": xkv[0], "v": xkv[1]})
+        (h, _), (self_c, cross_c) = jax.lax.scan(body, (h, 0.0),
+                                                 params["blocks"])
+        return h, {"self": self_c, "cross": cross_c, "pos": jnp.int32(s)}
+    raise ValueError(cfg.family)
+
+
+# -- decode -------------------------------------------------------------------
+def stack_decode(params, h, cache, cfg: ModelConfig, ctx: DistCtx):
+    """One token: h [B, 1, D] → (h, new cache)."""
+    pos = cache["pos"]
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def body(carry, xs):
+            p_l, c_l = xs
+            hh, c_new = dense_block_decode(p_l, carry, c_l, pos, cfg, ctx)
+            return hh, c_new
+        h, layers = jax.lax.scan(body, h, (params["blocks"], cache["layers"]))
+        return h, {"layers": layers, "pos": pos + 1}
+
+    if cfg.family == "ssm":
+        def body(carry, xs):
+            p_l, st = xs
+            hh, st = ssm_block_decode(p_l, carry, st, cfg)
+            return hh, st
+        h, states = jax.lax.scan(body, h, (params["blocks"], cache["layers"]))
+        return h, {"layers": states, "pos": pos + 1}
+
+    if cfg.family == "hybrid":
+        shared = params["shared_attn"]
+
+        def group(carry, xs):
+            p_g, (sts, kv) = xs
+            hh = carry
+            def inner(c, xs2):
+                p_l, st = xs2
+                return ssm_block_decode(p_l, c, st, cfg)
+            hh, sts = jax.lax.scan(inner, hh, (p_g, sts))
+            a_in = rmsnorm(shared["ln1"], hh, cfg.norm_eps)
+            y, kv = attn_decode(shared["attn"], a_in, kv, pos, cfg, ctx)
+            hh = hh + y
+            f_in = rmsnorm(shared["ln2"], hh, cfg.norm_eps)
+            y, _ = ffn_apply(shared, f_in, cfg, ctx)
+            hh = hh + y
+            return hh, (sts, kv)
+        h, (mamba_st, attn_st) = jax.lax.scan(
+            group, h, (params["blocks"], (cache["mamba"], cache["attn"])))
+        return h, {"mamba": mamba_st, "attn": attn_st, "pos": pos + 1}
+
+    if cfg.family == "audio":
+        def body(carry, xs):
+            p_l, (c_self, c_cross) = xs
+            hh = carry
+            a_in = rmsnorm(p_l["ln1"], hh, cfg.norm_eps)
+            y, c_self = attn_decode(p_l["attn"], a_in, c_self, pos, cfg, ctx)
+            hh = hh + y
+            x_in = rmsnorm(p_l["lnx"], hh, cfg.norm_eps)
+            hd = cfg.resolved_head_dim
+            q, _, _ = qkv_proj(p_l["xattn"], x_in, cfg.num_heads,
+                               cfg.num_kv_heads, hd)
+            o = attention(q, c_cross["k"], c_cross["v"], causal=False)
+            hh = hh + out_proj(p_l["xattn"], o)
+            f_in = rmsnorm(p_l["ln2"], hh, cfg.norm_eps)
+            y, _ = ffn_apply(p_l, f_in, cfg, ctx)
+            return hh + y, (c_self, c_cross)
+        h, (self_c, cross_c) = jax.lax.scan(
+            body, h, (params["blocks"], (cache["self"], cache["cross"])))
+        return h, {"self": self_c, "cross": cross_c, "pos": pos + 1}
+    raise ValueError(cfg.family)

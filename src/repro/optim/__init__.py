@@ -1,0 +1,22 @@
+"""Optimizers with shardable state + distributed-optimization tricks."""
+from repro.optim import adafactor, adamw, grad_compress, schedule
+from repro.optim.adafactor import AdafactorConfig
+from repro.optim.adamw import AdamWConfig, clip_by_global_norm, global_norm
+
+
+def make_optimizer(kind: str, **kw):
+    """→ (init_fn(params), update_fn(params, grads, state, lr_scale))."""
+    if kind == "adamw":
+        cfg = AdamWConfig(**kw)
+        return (adamw.init,
+                lambda p, g, s, lr=1.0: adamw.update(p, g, s, cfg, lr))
+    if kind == "adafactor":
+        cfg = AdafactorConfig(**kw)
+        return (adafactor.init,
+                lambda p, g, s, lr=1.0: adafactor.update(p, g, s, cfg, lr))
+    raise ValueError(kind)
+
+
+__all__ = ["make_optimizer", "AdamWConfig", "AdafactorConfig",
+           "global_norm", "clip_by_global_norm", "adamw", "adafactor",
+           "schedule", "grad_compress"]

@@ -1,0 +1,96 @@
+"""Adafactor (factored second moments) — the memory-lean optimizer used for
+the ≥100B MoE configs, where AdamW's 8 bytes/param of state would not fit
+512 × 16 GB even fully sharded.
+
+Factored rule (Shazeer & Stern 2018): for matrices, keep row/col running
+means of squared grads; v̂ = outer(r, c) / mean(r). Vectors fall back to a
+full second moment. Update is RMS-normalized per tensor.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdafactorConfig:
+    lr: float = 1e-3
+    decay: float = 0.8           # t^-decay second-moment decay schedule
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2
+
+
+def init(params: Params) -> dict:
+    def leaf_state(p):
+        if _factored(p.shape):
+            return {"r": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "c": jnp.zeros((*p.shape[:-2], p.shape[-1]), jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {"s": jax.tree.map(leaf_state, params,
+                              is_leaf=lambda x: hasattr(x, "shape")),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def update(params: Params, grads: Params, state: dict, cfg: AdafactorConfig,
+           lr_scale: jnp.ndarray | float = 1.0):
+    """Memory discipline (matters at 1T params): the normalized update
+    ``u`` is expressed as a *recomputable* fused elementwise function of
+    (g, r, c); the RMS clip reduces over one evaluation and the final
+    parameter write recomputes it, so no [shard]-sized f32 temp needs to
+    survive between the two.  Leaf updates are chained with
+    ``optimization_barrier`` so XLA schedules them one at a time and the
+    buffer assigner reuses one scratch region instead of summing all
+    leaves' temps."""
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    beta2 = 1.0 - t ** (-cfg.decay)
+    lr = cfg.lr * lr_scale
+
+    def upd(p, g, s):
+        g32 = g.astype(jnp.float32)
+        g2 = jnp.square(g32) + cfg.eps
+        if _factored(p.shape):
+            r = beta2 * s["r"] + (1 - beta2) * g2.mean(-1)
+            c = beta2 * s["c"] + (1 - beta2) * g2.mean(-2)
+            rmean = r.mean(-1, keepdims=True)
+            rr = jax.lax.rsqrt(jnp.maximum(
+                r / jnp.maximum(rmean, cfg.eps), cfg.eps))
+            cc = jax.lax.rsqrt(jnp.maximum(c, cfg.eps))
+            u_of = lambda: g32 * rr[..., None] * cc[..., None, :]
+            new_s = {"r": r, "c": c}
+        else:
+            v = beta2 * s["v"] + (1 - beta2) * g2
+            u_of = lambda: g32 * jax.lax.rsqrt(jnp.maximum(v, cfg.eps))
+            new_s = {"v": v}
+        rms = jnp.sqrt(jnp.mean(jnp.square(u_of())))
+        scale = lr / jnp.maximum(1.0, rms / cfg.clip_threshold)
+        p32 = p.astype(jnp.float32)
+        decay = cfg.weight_decay * lr if cfg.weight_decay else 0.0
+        return ((1.0 - decay) * p32 - scale * u_of()).astype(p.dtype), new_s
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    s_leaves = jax.tree.flatten(state["s"],
+                                is_leaf=lambda x: isinstance(x, dict)
+                                and ("r" in x or "v" in x))[0]
+    out = []
+    token = None
+    for p, g, s in zip(flat_p, flat_g, s_leaves):
+        if token is not None:  # serialize: one leaf's temps live at a time
+            g = jax.lax.optimization_barrier((g, token))[0]
+        new_p, new_s = upd(p, g, s)
+        token = new_p
+        out.append((new_p, new_s))
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_s = jax.tree.unflatten(tdef, [o[1] for o in out])
+    return new_p, {"s": new_s, "step": step}, {}

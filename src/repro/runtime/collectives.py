@@ -1,0 +1,87 @@
+"""HLO collective accounting — the roofline collective term.
+
+``cost_analysis()`` does not expose collective bytes, so we parse the
+compiled/optimized HLO text and sum operand payload bytes of every
+``all-gather`` / ``all-reduce`` / ``reduce-scatter`` / ``all-to-all`` /
+``collective-permute`` op. Bytes are *global* (summed over all devices'
+per-shard operands as they appear in the SPMD module × device count is NOT
+applied — the HLO is the per-device program, so operand shapes are already
+per-shard; we report per-device link bytes).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute", "collective-broadcast")
+
+# e.g. "bf16[2,4096,5120]{2,1,0}"  (layout suffix optional)
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*"          # result name
+    r"(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"   # result shape (or tuple)
+    r"([a-z\-]+)\(",                               # op name
+)
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_op: dict[str, int]
+    count_by_op: dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_op.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_op.values())
+
+    def summary(self) -> dict:
+        return {"bytes": dict(self.bytes_by_op),
+                "counts": dict(self.count_by_op),
+                "total_bytes": self.total_bytes}
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    """Sum result-shape payload bytes of every collective op instruction.
+
+    Result shape ≈ payload for all-reduce/permute/all-to-all; for
+    all-gather it's the gathered size (what actually crosses links is
+    (n-1)/n of it — we report the conservative full size).
+    """
+    bytes_by_op: dict[str, int] = defaultdict(int)
+    count_by_op: dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        shape_txt, opname = m.group(1), m.group(2)
+        base = opname.rstrip("-startdone")  # normalize async start/done pairs
+        for coll in COLLECTIVE_OPS:
+            if opname == coll or opname == coll + "-start":
+                bytes_by_op[coll] += _shape_bytes(shape_txt)
+                count_by_op[coll] += 1
+                break
+    return CollectiveStats(dict(bytes_by_op), dict(count_by_op))

@@ -1,0 +1,78 @@
+"""Fault-tolerant training driver: step watchdog + restore-on-failure.
+
+Wraps a train loop with the recovery policy a 1000-node run needs:
+
+* periodic async checkpoints (every ``ckpt_every`` steps, non-blocking);
+* a watchdog: steps that raise or exceed ``step_timeout`` count as
+  failures; after ``max_retries`` consecutive failures at the same step
+  the driver restores from the last checkpoint and re-enters the loop —
+  on a re-mesh, through ``ckpt.elastic.reshard_restore``;
+* deterministic data resume: the data iterator is re-seeded from the
+  restored step, so the token stream replays exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+from repro.ckpt import checkpoint
+
+
+@dataclasses.dataclass
+class FaultConfig:
+    ckpt_dir: str
+    ckpt_every: int = 50
+    keep: int = 2
+    max_retries: int = 2
+    step_timeout: float = 3600.0
+
+
+class FaultTolerantLoop:
+    """Drives ``step_fn(state, batch) -> (state, metrics)`` with recovery."""
+
+    def __init__(self, cfg: FaultConfig,
+                 step_fn: Callable[[Any, Any], tuple[Any, dict]],
+                 make_data: Callable[[int], Any],
+                 restore_fn: Callable[[Any, int | None], tuple[Any, int]]):
+        self.cfg = cfg
+        self.step_fn = step_fn
+        self.make_data = make_data       # start_step -> iterator
+        self.restore_fn = restore_fn     # (state_like, step|None) -> (state, step)
+        self.saver = checkpoint.AsyncSaver()
+        self.failures = 0
+
+    def run(self, state: Any, start_step: int, num_steps: int,
+            fail_injector: Callable[[int], None] | None = None):
+        step = start_step
+        data = self.make_data(step)
+        metrics_log = []
+        while step < num_steps:
+            try:
+                t0 = time.monotonic()
+                if fail_injector is not None:
+                    fail_injector(step)          # test hook
+                batch = next(data)
+                state, metrics = self.step_fn(state, batch)
+                dt = time.monotonic() - t0
+                if dt > self.cfg.step_timeout:
+                    raise TimeoutError(f"step {step} took {dt:.1f}s")
+                self.failures = 0
+            except Exception as e:  # noqa: BLE001 — any step fault
+                self.failures += 1
+                if self.failures > self.cfg.max_retries:
+                    raise RuntimeError(
+                        f"step {step}: {self.failures} consecutive failures"
+                    ) from e
+                self.saver.wait()
+                state, step = self.restore_fn(state, None)
+                data = self.make_data(step)      # deterministic replay
+                continue
+            metrics_log.append({"step": step, **metrics})
+            step += 1
+            if step % self.cfg.ckpt_every == 0:
+                self.saver.save(self.cfg.ckpt_dir, step, state,
+                                extra={"step": step})
+                checkpoint.prune_old(self.cfg.ckpt_dir, self.cfg.keep)
+        self.saver.wait()
+        return state, step, metrics_log

@@ -1,0 +1,253 @@
+"""Trip-count-aware HLO cost analysis.
+
+``compiled.cost_analysis()`` counts every computation ONCE — a scan over 61
+layers reports 1/61st of the real FLOPs, and collectives inside the loop
+are likewise under-counted.  Since every model here scans over layers (and
+microbatches, and attention chunks), we parse the optimized per-device HLO
+text ourselves and walk the call graph, multiplying ``while`` bodies by
+their trip counts (recovered from the loop-condition's ``compare(counter,
+constant)`` pattern — the shape XLA emits for ``lax.scan``/``fori_loop``).
+
+Per-computation costs:
+  * flops — ``dot`` instructions: 2 · |out| · Π(contracting dims);
+  * bytes — operand + result buffer sizes of compute/data-movement ops
+    (fusions count at the call site; layout-only ops are skipped) — an
+    HBM-traffic model consistent with XLA's own per-instruction convention;
+  * collective bytes/counts by op kind (result-shape payload).
+
+Everything is per-device (the HLO is the SPMD per-device program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_LHS_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*")
+_OPCODE_RE = re.compile(r"\s*([a-z][\w\-]*)\(")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s+->")
+_CALL_ATTR_RE = re.compile(r"calls=(%[\w.\-]+)")
+_WHILE_RE = re.compile(r"condition=(%[\w.\-]+), body=(%[\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_CONST_RE = re.compile(r"\bs32\[\]\s+constant\((\d+)\)")
+_OPERAND_RE = re.compile(r"(%[\w.\-]+)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute", "collective-broadcast", "ragged-all-to-all")
+
+_SKIP_BYTES_OPS = {
+    "tuple", "get-tuple-element", "parameter", "constant", "bitcast",
+    "while", "conditional", "after-all", "add-dependency", "broadcast",
+    "iota", "reshape",
+}
+
+
+def _shape_elems_bytes(text: str) -> tuple[int, int]:
+    total_b = 0
+    total_e = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total_e += n
+        total_b += n * _DTYPE_BYTES[dt]
+    return total_e, total_b
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape_txt: str
+    opcode: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list
+    defs: dict          # %name -> shape text (results)
+
+
+def _split_instr(line: str):
+    """'%r = <type> opcode(…' → (name, type_text, opcode) or None.
+
+    The result type may be an arbitrarily nested tuple, so it is scanned
+    with balanced-paren matching rather than a regex.
+    """
+    m = _LHS_RE.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    rest = line[m.end():]
+    if rest.startswith("("):          # tuple type: find the matching ')'
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        type_txt, tail = rest[:i + 1], rest[i + 1:]
+    else:                             # plain 'f32[...]{layout}' token
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        type_txt, tail = rest[:sp], rest[sp:]
+    om = _OPCODE_RE.match(tail)
+    if not om:
+        return None
+    return name, type_txt, om.group(1)
+
+
+def parse_hlo(text: str) -> tuple[dict, str]:
+    comps: dict[str, Computation] = {}
+    entry = None
+    cur: Computation | None = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = Computation("%" + m.group(1).lstrip("%"), [], {})
+                if line.lstrip().startswith("ENTRY"):
+                    entry = cur.name
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        parsed = _split_instr(line)
+        if parsed is not None:
+            name, shape_txt, opcode = parsed
+            cur.defs[name] = shape_txt
+            cur.instrs.append(Instr(name, shape_txt, opcode, line.strip()))
+    return comps, entry
+
+
+def _trip_count(cond: Computation) -> int:
+    best = 1
+    for ins in cond.instrs:
+        for c in _CONST_RE.findall(ins.line):
+            best = max(best, int(c))
+    return best
+
+
+def _dot_flops(ins: Instr, defs: dict) -> float:
+    out_e, _ = _shape_elems_bytes(ins.shape_txt)
+    m = _CONTRACT_RE.search(ins.line)
+    ops = _OPERAND_RE.findall(ins.line.split("(", 1)[1])
+    lhs_shape = defs.get(ops[0]) if ops else None
+    contract = 1
+    if m and lhs_shape:
+        dims_txt = _SHAPE_RE.search(lhs_shape)
+        if dims_txt:
+            dims = [int(d) for d in dims_txt.group(2).split(",") if d]
+            for idx in m.group(1).split(","):
+                if idx:
+                    contract *= dims[int(idx)]
+    return 2.0 * out_e * contract
+
+
+def _instr_bytes(ins: Instr, defs: dict) -> int:
+    _, out_b = _shape_elems_bytes(ins.shape_txt)
+    total = out_b
+    args = ins.line.split("(", 1)[1]
+    args = args.split("), ")[0]
+    for op in _OPERAND_RE.findall(args):
+        if op in defs:
+            _, b = _shape_elems_bytes(defs[op])
+            total += b
+    return total
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: dict = dataclasses.field(default_factory=dict)
+    coll_counts: dict = dataclasses.field(default_factory=dict)
+
+    def scaled(self, k: float) -> "HloCost":
+        return HloCost(self.flops * k, self.bytes * k,
+                       {o: b * k for o, b in self.coll_bytes.items()},
+                       {o: c * k for o, c in self.coll_counts.items()})
+
+    def add(self, other: "HloCost") -> None:
+        self.flops += other.flops
+        self.bytes += other.bytes
+        for o, b in other.coll_bytes.items():
+            self.coll_bytes[o] = self.coll_bytes.get(o, 0) + b
+        for o, c in other.coll_counts.items():
+            self.coll_counts[o] = self.coll_counts.get(o, 0) + c
+
+    @property
+    def total_coll_bytes(self) -> float:
+        return sum(self.coll_bytes.values())
+
+
+def analyze(text: str) -> HloCost:
+    comps, entry = parse_hlo(text)
+    memo: dict[str, HloCost] = {}
+
+    def comp_cost(name: str) -> HloCost:
+        if name in memo:
+            return memo[name]
+        memo[name] = HloCost()  # cycle guard (HLO has no recursion)
+        comp = comps.get(name)
+        if comp is None:
+            return memo[name]
+        cost = HloCost()
+        for ins in comp.instrs:
+            if ins.opcode == "dot":
+                cost.flops += _dot_flops(ins, comp.defs)
+            base = ins.opcode
+            if base.endswith("-start"):
+                base = base[:-6]
+            if base in COLLECTIVES:
+                _, b = _shape_elems_bytes(ins.shape_txt)
+                cost.coll_bytes[base] = cost.coll_bytes.get(base, 0) + b
+                cost.coll_counts[base] = cost.coll_counts.get(base, 0) + 1
+                cost.bytes += b
+            elif ins.opcode not in _SKIP_BYTES_OPS \
+                    and not ins.opcode.endswith("-done"):
+                cost.bytes += _instr_bytes(ins, comp.defs)
+            if ins.opcode == "while":
+                m = _WHILE_RE.search(ins.line)
+                if m:
+                    trips = _trip_count(comps[m.group(1)]) if m.group(1) in comps else 1
+                    body = comp_cost(m.group(2))
+                    cond = comp_cost(m.group(1))
+                    inner = HloCost()
+                    inner.add(body)
+                    inner.add(cond)
+                    cost.add(inner.scaled(trips))
+            elif ins.opcode == "conditional":
+                m = _BRANCHES_RE.search(ins.line)
+                if m:
+                    for b in _OPERAND_RE.findall(m.group(1)):
+                        cost.add(comp_cost(b))
+            else:
+                m = _CALL_ATTR_RE.search(ins.line)
+                if m:  # fusion/call/custom-call body (dots inside fusions)
+                    body = comp_cost(m.group(1))
+                    cost.flops += body.flops  # bytes counted at call site
+                    for o, b in body.coll_bytes.items():
+                        cost.coll_bytes[o] = cost.coll_bytes.get(o, 0) + b
+                    for o, c in body.coll_counts.items():
+                        cost.coll_counts[o] = cost.coll_counts.get(o, 0) + c
+        memo[name] = cost
+        return cost
+
+    return comp_cost(entry)

@@ -1,0 +1,24 @@
+"""Mesh helpers shared by launch scripts and tests."""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> Mesh:
+    return jax.make_mesh(shape, axes)
+
+
+def single_device_mesh(axes: tuple[str, ...] = ("data", "model")) -> Mesh:
+    return jax.make_mesh((1,) * len(axes), axes)
+
+
+def mesh_tp(mesh: Mesh) -> int:
+    return mesh.shape.get("model", 1)
+
+
+def mesh_dp(mesh: Mesh) -> int:
+    n = 1
+    for a in ("pod", "data"):
+        n *= mesh.shape.get(a, 1)
+    return n

@@ -1,0 +1,235 @@
+"""Sharding rules engine: params / optimizer state / batch → NamedShardings.
+
+Name-based rules with divisibility fallbacks: every rule checks that the
+dimension divides by the axis size and silently degrades to replication
+when it doesn't (e.g. smollm's 9 heads or seamless' 256206 vocab on a
+16-way model axis).  Policy:
+
+* TP ('model'): attention heads (q/o always, k/v when kv_heads divide),
+  MLP hidden, MoE expert dim, Mamba-1 inner channels, vocab dim of the
+  embedding table.  Mamba-2's fused in_proj concat is left replicated (its
+  split boundaries don't align with uniform shards — zamba2 is small).
+* FSDP (cfg.fsdp_axes ⊆ ('pod','data')): the largest remaining dim of
+  every ≥2D body tensor (ZeRO-3; scan's per-layer slice gather is the
+  standard FSDP all-gather).
+* Batch: leading dim over ('pod','data') ∩ mesh axes.
+
+The same rules evaluated against a different mesh drive elastic restarts
+(ckpt.elastic.reshard_restore).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+Params = Any
+
+# stack depth by top-level param group (leading scan dims to skip)
+_STACK_DEPTH = {"blocks": 1, "enc_blocks": 1, "shared_attn": 0}
+
+
+def _tp_rule(path_keys: list[str], body_shape: tuple[int, ...],
+             cfg: ModelConfig, tp: int) -> dict[int, str]:
+    """→ {body_dim: 'model'} TP assignment for this leaf (may be empty)."""
+    name = path_keys[-1]
+    inside = set(path_keys)
+
+    def ok(dim_size):
+        return tp > 1 and dim_size % tp == 0
+
+    if "attn" in inside or "xattn" in inside:
+        heads_ok = cfg.num_heads % tp == 0 if tp > 1 else False
+        if name == "wq" and heads_ok:
+            return {len(body_shape) - 1: "model"}
+        if name in ("wk", "wv") and heads_ok and cfg.num_kv_heads % tp == 0:
+            return {len(body_shape) - 1: "model"}
+        if name == "wo" and heads_ok:
+            return {len(body_shape) - 2: "model"}
+        return {}
+    if "moe" in inside:
+        if name in ("wi", "wg", "wo") and ok(body_shape[0]):
+            return {0: "model"}         # expert dim
+        return {}                        # router replicated
+    if "mlp" in inside or "shared" in inside:
+        if name in ("wi", "wg") and ok(body_shape[-1]):
+            return {len(body_shape) - 1: "model"}
+        if name == "wo" and ok(body_shape[-2]):
+            return {len(body_shape) - 2: "model"}
+        return {}
+    if "mix" in inside:
+        if cfg.ssm_version != 1:
+            return {}                    # mamba2: FSDP only (see module doc)
+        di = cfg.d_inner
+        if not ok(di):
+            return {}
+        rules = {
+            "in_proj": len(body_shape) - 1,   # [D, 2Di] (split-aligned)
+            "conv_w": len(body_shape) - 2,    # [Di, W]
+            "conv_b": len(body_shape) - 1,
+            "x_proj": len(body_shape) - 2,    # [Di, R+2N] row-parallel
+            "dt_w": len(body_shape) - 1,      # [R, Di]
+            "dt_b": len(body_shape) - 1,
+            "A_log": len(body_shape) - 2,     # [Di, N]
+            "D": len(body_shape) - 1,
+            "out_proj": len(body_shape) - 2,  # [Di, D]
+        }
+        if name in rules:
+            return {rules[name]: "model"}
+        return {}
+    if name == "table" and ok(body_shape[0]):
+        return {0: "model"}              # vocab-sharded embedding
+    return {}
+
+
+def _fsdp_dims(body_shape, taken: dict[int, Any], fsdp_axes: tuple[str, ...],
+               mesh: Mesh) -> dict[int, tuple[str, ...]]:
+    axes = tuple(a for a in fsdp_axes if a in mesh.shape)
+    if not axes or len(body_shape) < 2:
+        return {}
+    nshard = 1
+    for a in axes:
+        nshard *= mesh.shape[a]
+    # largest untaken dim that divides
+    cands = [(size, d) for d, size in enumerate(body_shape)
+             if d not in taken and size % nshard == 0 and size >= nshard]
+    if not cands:
+        return {}
+    _, dim = max(cands)
+    return {dim: axes}
+
+
+def _spec_for_leaf(path_keys: list[str], shape: tuple[int, ...],
+                   cfg: ModelConfig, mesh: Mesh,
+                   fsdp_axes: tuple[str, ...]) -> P:
+    stack_depth = 0
+    for k in path_keys:
+        if k in _STACK_DEPTH:
+            stack_depth = _STACK_DEPTH[k]
+            if cfg.family == "hybrid" and k == "blocks":
+                stack_depth = 2
+            break
+    body = shape[stack_depth:]
+    tp = mesh.shape.get("model", 1)
+    if not cfg.tp_enabled or cfg.dp_over_model:
+        tp = 1  # pure-DP/ZeRO-3 variant: the model axis serves the batch
+    assign: dict[int, Any] = dict(_tp_rule(path_keys, body, cfg, tp))
+    assign.update(_fsdp_dims(body, assign, fsdp_axes, mesh))
+    entries = [None] * len(shape)
+    for d, ax in assign.items():
+        entries[stack_depth + d] = ax
+    return P(*entries) if any(e is not None for e in entries) else P()
+
+
+def _path_keys(path) -> list[str]:
+    return [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+
+
+def param_shardings(params: Params, cfg: ModelConfig, mesh: Mesh) -> Params:
+    """Pytree of NamedSharding matching ``params`` (works on shapes too)."""
+    def one(path, leaf):
+        spec = _spec_for_leaf(_path_keys(path), tuple(leaf.shape), cfg, mesh,
+                              cfg.fsdp_axes)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def _padded_entries(spec: P, rank: int) -> list:
+    ents = list(tuple(spec))
+    return ents + [None] * (rank - len(ents))
+
+
+def opt_state_shardings(state: Params, params: Params, cfg: ModelConfig,
+                        mesh: Mesh) -> Params:
+    """Optimizer-state shardings derived from the param rules.
+
+    State layouts: adamw ``{"m": P, "v": P, "step"}`` (mirror params);
+    adafactor ``{"s": tree-of {r, c} | {v}, "step"}`` where ``r`` has the
+    param shape minus its last dim and ``c`` minus its second-to-last.
+    """
+    pspecs: dict[str, P] = {}
+
+    def record(path, leaf):
+        keys = _path_keys(path)
+        pspecs["/".join(keys)] = _spec_for_leaf(keys, tuple(leaf.shape), cfg,
+                                                mesh, cfg.fsdp_axes)
+    jax.tree_util.tree_map_with_path(record, params)
+
+    def one(path, leaf):
+        keys = _path_keys(path)
+        if leaf.ndim == 0 or keys[0] not in ("m", "v", "s"):
+            return NamedSharding(mesh, P())
+        if keys[0] in ("m", "v"):                       # adamw mirrors
+            spec = pspecs.get("/".join(keys[1:]), P())
+            return NamedSharding(mesh, spec)
+        tail = keys[-1]                                  # adafactor
+        base = pspecs.get("/".join(keys[1:-1]), P())
+        if tail == "v":                                  # unfactored leaf
+            return NamedSharding(mesh, base)
+        ents = _padded_entries(base, leaf.ndim + 1)      # param rank
+        if tail == "r":
+            ents = ents[:-1]                             # drop last dim
+        else:                                            # "c": drop dim -2
+            ents = ents[:-2] + [ents[-1]]
+        return NamedSharding(mesh, P(*ents))
+    return jax.tree_util.tree_map_with_path(one, state)
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def batch_shardings(batch: Params, mesh: Mesh) -> Params:
+    axes = batch_axes(mesh)
+    def one(leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, P(axes, *([None] * (leaf.ndim - 1))))
+    return jax.tree.map(one, batch)
+
+
+def cache_shardings(cache: Params, mesh: Mesh, seq_axes: tuple[str, ...],
+                    baxes: tuple[str, ...] | None = None,
+                    cfg: ModelConfig | None = None) -> Params:
+    """Decode-cache shardings: batch over ``baxes``, kv sequence dim over
+    ``seq_axes`` (SP), Mamba-1 state channels over TP, rest replicated.
+
+    Cache leaves: [L, B, S, K, hd] (kv), [L, B, W, C] / [L, B, Di, N]
+    (ssm), [(G,) ...] hybrid, scalars (pos). ``baxes`` must come from the
+    shape-aware ctx (empty when global_batch doesn't divide — long_500k)."""
+    baxes = batch_axes(mesh) if baxes is None else baxes
+    tp = mesh.shape.get("model", 1)
+
+    def one(path, leaf):
+        keys = _path_keys(path)
+        if leaf.ndim == 0:              # pos counter
+            return NamedSharding(mesh, P())
+        entries = [None] * leaf.ndim
+        # all cache leaves are layer-stacked: dim0 = L (hybrid: [G, ...]
+        # for attn / [G, l, ...] for mamba states), batch follows.
+        name = keys[-1]
+        if name in ("k", "v") and leaf.ndim >= 5:        # [L, B, S, K, hd]
+            bdim = leaf.ndim - 4
+            if baxes:
+                entries[bdim] = baxes
+            if seq_axes and "cross" not in keys:  # SP only on self caches
+                entries[bdim + 1] = seq_axes
+        elif leaf.ndim >= 3:                             # ssm states
+            bdim = 2 if "mamba" in keys else 1
+            bdim = min(bdim, leaf.ndim - 1)
+            if baxes:
+                entries[bdim] = baxes
+            # mamba1 channel-parallel decode state (matches param TP)
+            if (cfg is not None and cfg.ssm_version == 1 and tp > 1
+                    and "model" not in (seq_axes or ())):
+                cdim = leaf.ndim - 1 if name == "conv" else leaf.ndim - 2
+                if cdim > bdim and leaf.shape[cdim] % tp == 0 \
+                        and leaf.shape[cdim] >= tp:
+                    entries[cdim] = "model"
+        return NamedSharding(mesh, P(*entries))
+    return jax.tree_util.tree_map_with_path(one, cache)

@@ -1,0 +1,74 @@
+"""Straggler mitigation: deterministic microbatch rebalancing.
+
+At 1000+ nodes, persistent stragglers (thermal throttling, a slow HBM
+stack, a flaky NIC) stall every bulk-synchronous collective.  Mitigation
+used here (and testable on CPU):
+
+* per-step host-side timing EWMA per stage/replica
+  (:class:`StragglerTracker`);
+* when a replica's EWMA exceeds ``threshold`` × median, the next step's
+  microbatch allotment is rebalanced away from it
+  (:func:`rebalance_microbatches` — deterministic, so every host computes
+  the identical new plan without extra coordination);
+* persistent offenders (> ``evict_after`` rebalances) are reported for
+  eviction → the elastic-remesh path (ckpt.elastic) takes over.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class StragglerTracker:
+    num_workers: int
+    alpha: float = 0.2            # EWMA coefficient
+    threshold: float = 1.5        # × median ⇒ straggler
+    evict_after: int = 3
+
+    def __post_init__(self):
+        self.ewma = [0.0] * self.num_workers
+        self.flag_counts = [0] * self.num_workers
+        self.steps = 0
+
+    def update(self, step_times: list[float]) -> list[int]:
+        """Feed per-worker step times; returns currently flagged workers."""
+        assert len(step_times) == self.num_workers
+        self.steps += 1
+        for i, t in enumerate(step_times):
+            self.ewma[i] = (t if self.steps == 1
+                            else self.alpha * t + (1 - self.alpha) * self.ewma[i])
+        med = sorted(self.ewma)[self.num_workers // 2]
+        flagged = [i for i, e in enumerate(self.ewma)
+                   if med > 0 and e > self.threshold * med]
+        for i in flagged:
+            self.flag_counts[i] += 1
+        return flagged
+
+    def evictions(self) -> list[int]:
+        return [i for i, c in enumerate(self.flag_counts)
+                if c >= self.evict_after]
+
+
+def rebalance_microbatches(total_micro: int, ewma: list[float],
+                           min_share: int = 1) -> list[int]:
+    """Split ``total_micro`` microbatches ∝ worker speed (1/ewma),
+    deterministically (largest-remainder rounding, index tie-break)."""
+    n = len(ewma)
+    speeds = [1.0 / max(e, 1e-9) for e in ewma]
+    s = sum(speeds)
+    raw = [total_micro * sp / s for sp in speeds]
+    plan = [max(min_share, int(r)) for r in raw]
+    # largest remainder until the plan sums to total
+    while sum(plan) < total_micro:
+        rema = [(raw[i] - plan[i], -i) for i in range(n)]
+        i = -max(rema)[1]
+        plan[i] += 1
+    while sum(plan) > total_micro:
+        rema = [(raw[i] - plan[i], i) for i in range(n)]
+        i = min(rema)[1]
+        if plan[i] > min_share:
+            plan[i] -= 1
+        else:
+            j = max(range(n), key=lambda q: plan[q])
+            plan[j] -= 1
+    return plan

@@ -1,0 +1,12 @@
+"""Stencil application layer — the paper's evaluation domain (§IV/§V)."""
+from repro.stencil.grids import (partition_rows, run_spatial_2d,
+                                 unpartition_rows)
+from repro.stencil.ips import PAPER_ITERATIONS, TABLE_II, StencilIP
+from repro.stencil.pipeline import (StencilRun, make_grid, reference_run,
+                                    run_openmp_style, run_space_partitioned,
+                                    run_time_pipeline)
+
+__all__ = ["TABLE_II", "PAPER_ITERATIONS", "StencilIP", "StencilRun",
+           "make_grid", "run_openmp_style", "run_time_pipeline",
+           "run_space_partitioned", "reference_run", "run_spatial_2d",
+           "partition_rows", "unpartition_rows"]

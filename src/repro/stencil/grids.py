@@ -1,0 +1,87 @@
+"""Grid partitioning + halo exchange — spatial (cell-parallel) scaling.
+
+§IV of the paper scales stencils "in both space and time": time scaling is
+the IP chain (ring pipeline), space scaling splits the grid across
+accelerators.  Here space scaling shards grid rows over a mesh axis; each
+step exchanges one halo row with ring neighbors via ``ppermute`` (the
+optical-link hop, packed per :mod:`repro.core.frame`) and updates the local
+block.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def stencil2d_raw(v32: jnp.ndarray, coeffs) -> jnp.ndarray:
+    """Unmasked weighted shifted sum (edges garbage — caller masks)."""
+    acc = jnp.zeros(v32.shape, jnp.float32)
+    for di in (-1, 0, 1):
+        for dj in (-1, 0, 1):
+            c = float(coeffs[di + 1][dj + 1])
+            if c != 0.0:
+                acc = acc + c * jnp.roll(v32, (-di, -dj), (0, 1))
+    return acc
+
+
+def _halo_exchange(local: jnp.ndarray, axis: str, n_shards: int):
+    """Fetch bottom row of the ring predecessor and top row of the successor."""
+    if n_shards == 1:
+        z = jnp.zeros_like(local[:1])
+        return z, z
+    fwd = [(i, (i + 1) % n_shards) for i in range(n_shards)]
+    bwd = [((i + 1) % n_shards, i) for i in range(n_shards)]
+    top_halo = jax.lax.ppermute(local[-1:], axis, fwd)   # from shard i-1
+    bot_halo = jax.lax.ppermute(local[:1], axis, bwd)    # from shard i+1
+    return top_halo, bot_halo
+
+
+def spatial_step_2d(local: jnp.ndarray, coeffs, axis: str, n_shards: int,
+                    grid_h: int) -> jnp.ndarray:
+    """One stencil iteration on a row-sharded grid (runs inside shard_map)."""
+    h_loc, w = local.shape
+    shard = jax.lax.axis_index(axis) if n_shards > 1 else 0
+    top, bot = _halo_exchange(local, axis, n_shards)
+    padded = jnp.concatenate([top, local.astype(jnp.float32), bot], axis=0)
+    out = stencil2d_raw(padded, coeffs)[1:-1].astype(local.dtype)
+    gi = shard * h_loc + jax.lax.broadcasted_iota(jnp.int32, local.shape, 0)
+    gj = jax.lax.broadcasted_iota(jnp.int32, local.shape, 1)
+    interior = (gi > 0) & (gi < grid_h - 1) & (gj > 0) & (gj < w - 1)
+    return jnp.where(interior, out, local)
+
+
+def run_spatial_2d(grid: jnp.ndarray, coeffs, iterations: int, mesh: Mesh,
+                   axis: str = "data") -> jnp.ndarray:
+    """Row-shard ``grid`` over ``axis`` and run ``iterations`` halo-exchange
+    steps — cell parallelism across devices."""
+    n = mesh.shape[axis]
+    h = grid.shape[0]
+    assert h % n == 0, f"grid rows {h} not divisible by {n} shards"
+    coeffs = tuple(tuple(float(c) for c in row) for row in coeffs)
+
+    @jax.jit
+    def run(g):
+        def body(local):
+            step = lambda _, v: spatial_step_2d(v, coeffs, axis, n, h)
+            return jax.lax.fori_loop(0, iterations, step, local)
+        return shard_map(body, mesh=mesh, in_specs=P(axis, None),
+                         out_specs=P(axis, None), check_vma=False)(g)
+
+    return run(grid)
+
+
+def partition_rows(grid: jnp.ndarray, n: int) -> jnp.ndarray:
+    """[H, W] → [n, H/n, W] row blocks (microbatch axis for the pipeline)."""
+    h, w = grid.shape
+    assert h % n == 0
+    return grid.reshape(n, h // n, w)
+
+
+def unpartition_rows(blocks: jnp.ndarray) -> jnp.ndarray:
+    n, h, w = blocks.shape
+    return blocks.reshape(n * h, w)

@@ -1,0 +1,97 @@
+"""The five stencil IPs of the paper (Table I), variant-registered.
+
+Each IP exists as a *software* function (``do_*`` — the pure-jnp oracle, the
+paper's algorithm-verification flow) and a *hardware* variant (``hw_*`` — the
+Pallas TPU kernel), bound together with ``declare variant`` exactly as
+Listing 3 binds ``do_laplace2d`` to ``hw_laplace2d`` under the vc709 flag.
+
+Task convention: each IP takes the grid value and returns the new grid
+(one iteration). The dims arguments of the C signature are implicit in the
+array shape.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.variant import declare_variant
+from repro.kernels.stencil2d import (DIFFUSION2D, JACOBI9, LAPLACE2D,
+                                     flops_per_cell, stencil2d, stencil2d_ref)
+from repro.kernels.stencil3d import (DIFFUSION3D, LAPLACE3D,
+                                     flops_per_cell_3d, stencil3d,
+                                     stencil3d_ref)
+
+
+# -- software bases (the paper's `do_*` C functions) ----------------------
+def do_laplace2d(v: jnp.ndarray) -> jnp.ndarray:
+    return stencil2d_ref(v, LAPLACE2D)
+
+def do_diffusion2d(v: jnp.ndarray) -> jnp.ndarray:
+    return stencil2d_ref(v, DIFFUSION2D)
+
+def do_jacobi9(v: jnp.ndarray) -> jnp.ndarray:
+    return stencil2d_ref(v, JACOBI9)
+
+def do_laplace3d(v: jnp.ndarray) -> jnp.ndarray:
+    return stencil3d_ref(v, LAPLACE3D)
+
+def do_diffusion3d(v: jnp.ndarray) -> jnp.ndarray:
+    return stencil3d_ref(v, DIFFUSION3D)
+
+
+# -- hardware variants (`hw_*` IP-cores) -----------------------------------
+@declare_variant(base=do_laplace2d, match="tpu")
+def hw_laplace2d(v: jnp.ndarray) -> jnp.ndarray:
+    return stencil2d(v, LAPLACE2D)
+
+@declare_variant(base=do_diffusion2d, match="tpu")
+def hw_diffusion2d(v: jnp.ndarray) -> jnp.ndarray:
+    return stencil2d(v, DIFFUSION2D)
+
+@declare_variant(base=do_jacobi9, match="tpu")
+def hw_jacobi9(v: jnp.ndarray) -> jnp.ndarray:
+    return stencil2d(v, JACOBI9)
+
+@declare_variant(base=do_laplace3d, match="tpu")
+def hw_laplace3d(v: jnp.ndarray) -> jnp.ndarray:
+    return stencil3d(v, LAPLACE3D)
+
+@declare_variant(base=do_diffusion3d, match="tpu")
+def hw_diffusion3d(v: jnp.ndarray) -> jnp.ndarray:
+    return stencil3d(v, DIFFUSION3D)
+
+
+# -- catalogue (paper Tables I & II) ---------------------------------------
+class StencilIP:
+    def __init__(self, name, fn, coeffs, ndim, grid_size, ips_per_fpga):
+        self.name = name
+        self.fn = fn                    # software base (variant-resolvable)
+        self.coeffs = coeffs
+        self.ndim = ndim
+        self.grid_size = grid_size      # paper Table II setup
+        self.ips_per_fpga = ips_per_fpga
+
+    @property
+    def flops_per_cell(self) -> int:
+        return (flops_per_cell(self.coeffs) if self.ndim == 2
+                else flops_per_cell_3d(self.coeffs))
+
+    def cells(self) -> int:
+        n = 1
+        for d in self.grid_size:
+            n *= d
+        return n
+
+
+TABLE_II = {
+    "laplace2d":   StencilIP("laplace2d", do_laplace2d, LAPLACE2D, 2,
+                             (4096, 512), 4),
+    "laplace3d":   StencilIP("laplace3d", do_laplace3d, LAPLACE3D, 3,
+                             (512, 64, 64), 2),
+    "diffusion2d": StencilIP("diffusion2d", do_diffusion2d, DIFFUSION2D, 2,
+                             (4096, 512), 1),
+    "diffusion3d": StencilIP("diffusion3d", do_diffusion3d, DIFFUSION3D, 3,
+                             (256, 32, 32), 1),
+    "jacobi9":     StencilIP("jacobi9", do_jacobi9, JACOBI9, 2,
+                             (1024, 128), 1),
+}
+PAPER_ITERATIONS = 240

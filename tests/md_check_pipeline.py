@@ -1,0 +1,65 @@
+"""Multi-device ring-pipeline checks. Run via subprocess with
+XLA_FLAGS=--xla_force_host_platform_device_count=<N> (see test_pipeline.py).
+
+Exits non-zero on any mismatch; prints OK lines per check.
+"""
+import os
+import sys
+
+assert "--xla_force_host_platform_device_count" in os.environ.get("XLA_FLAGS", ""), \
+    "run me through test_pipeline.py"
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pipeline import reference_pipeline, ring_pipeline
+
+
+def check(name, cond):
+    if not cond:
+        print(f"FAIL {name}")
+        sys.exit(1)
+    print(f"OK {name}")
+
+
+def main() -> None:
+    n_dev = jax.device_count()
+    mesh = jax.make_mesh((n_dev,), ("stage",))
+    rng = np.random.RandomState(0)
+
+    def stage_fn(params, x):
+        w, b = params
+        return jnp.tanh(x @ w + b)
+
+    d = 8
+    for (num_micro, rounds) in [(1, 1), (4, 1), (8, 1), (4, 3), (1, 2)]:
+        w = jnp.asarray(rng.randn(rounds, n_dev, d, d) * 0.3, jnp.float32)
+        b = jnp.asarray(rng.randn(rounds, n_dev, d) * 0.1, jnp.float32)
+        params = (w if rounds > 1 else w[0], b if rounds > 1 else b[0])
+        x = jnp.asarray(rng.randn(num_micro, 3, d), jnp.float32)
+        got = ring_pipeline(stage_fn, params, x, mesh, axis="stage",
+                            rounds=rounds)
+        want = reference_pipeline(stage_fn, params, x, n_dev, rounds=rounds)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+        check(f"pipeline S={n_dev} M={num_micro} R={rounds}", True)
+
+    # pytree state payload (hidden, aux) — the zamba/mamba stage shape
+    def tree_stage(params, state):
+        h, aux = state
+        return (jnp.sin(h * params["k"]), aux + jnp.sum(h))
+
+    k = jnp.arange(1, n_dev + 1, dtype=jnp.float32).reshape(n_dev, 1)
+    xs = (jnp.asarray(rng.randn(3, 5), jnp.float32), jnp.zeros((3,)))
+    got = ring_pipeline(tree_stage, {"k": k}, xs, mesh)
+    want = reference_pipeline(tree_stage, {"k": k}, xs, n_dev)
+    for g, w_ in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w_),
+                                   rtol=2e-5, atol=2e-5)
+    check("pipeline pytree payload", True)
+    print("ALL_OK")
+
+
+if __name__ == "__main__":
+    main()

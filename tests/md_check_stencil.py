@@ -1,0 +1,52 @@
+"""Multi-device stencil checks (spatial + time pipeline) — run via
+test_stencil.py subprocess with forced host device count."""
+import os
+import sys
+
+assert "--xla_force_host_platform_device_count" in os.environ.get("XLA_FLAGS", "")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.stencil import (TABLE_II, make_grid, reference_run,
+                           run_space_partitioned, run_time_pipeline)
+
+
+def main() -> None:
+    n = jax.device_count()
+    ip = TABLE_II["laplace2d"]
+    grid = jnp.asarray(np.random.RandomState(0).rand(64, 128), jnp.float32)
+
+    # spatial: row-sharded halo exchange == sequential reference
+    mesh = jax.make_mesh((n,), ("data",))
+    iters = 5
+    got = run_space_partitioned(ip, grid, iters, mesh)
+    want = reference_run(ip, grid, iters)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+    print(f"OK spatial S={n}")
+
+    # time pipeline: M grids × (S stages × R rounds) iterations
+    mesh = jax.make_mesh((n,), ("stage",))
+    rounds = 2
+    grids = jnp.stack([grid + i for i in range(3)])
+    got = run_time_pipeline(ip, grids, n * rounds, mesh)
+    want = jnp.stack([reference_run(ip, g, n * rounds) for g in grids])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+    print(f"OK time-pipeline S={n} R={rounds}")
+
+    # diffusion3d through the time pipeline too
+    ip3 = TABLE_II["diffusion3d"]
+    g3 = jnp.asarray(np.random.RandomState(1).rand(3, 8, 8, 16), jnp.float32)
+    got = run_time_pipeline(ip3, g3, n, mesh)
+    want = jnp.stack([reference_run(ip3, g, n) for g in g3])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+    print("OK time-pipeline-3d")
+    print("ALL_OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Distributed-correctness wrapper: runs md_check_dist.py on a forced
+8-device host platform. The sharded train/serve steps (TP + FSDP + DP +
+EP shard_map + SP decode + grad accumulation) must reproduce single-device
+numerics for six architectures."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.slow
+def test_distributed_matches_single_device():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(_REPO, "src")
+    out = subprocess.run(
+        [sys.executable, os.path.join(_REPO, "tests", "md_check_dist.py")],
+        env=env, capture_output=True, text=True, timeout=1800)
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert "ALL_OK" in out.stdout

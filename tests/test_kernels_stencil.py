@@ -1,0 +1,128 @@
+"""Per-kernel allclose: Pallas stencils (interpret mode) vs pure-jnp oracle,
+swept over shapes, dtypes, block sizes and iteration counts."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.stencil2d import (DIFFUSION2D, JACOBI9, LAPLACE2D,
+                                     pick_block_rows, stencil2d,
+                                     stencil2d_ref)
+from repro.kernels.stencil2d.ref import diffusion2d_coeffs, flops_per_cell
+from repro.kernels.stencil3d import (DIFFUSION3D, LAPLACE3D,
+                                     pick_block_depth, stencil3d,
+                                     stencil3d_ref)
+
+COEFFS_2D = {"laplace": LAPLACE2D, "diffusion": DIFFUSION2D, "jacobi9": JACOBI9}
+TAPS_3D = {"laplace3d": LAPLACE3D, "diffusion3d": DIFFUSION3D}
+
+
+def _rand(shape, dtype, seed=0):
+    x = np.random.RandomState(seed).rand(*shape).astype(np.float32)
+    return jnp.asarray(x, dtype)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+           dict(rtol=1e-5, atol=1e-6)
+
+
+class TestStencil2D:
+    @pytest.mark.parametrize("name", list(COEFFS_2D))
+    @pytest.mark.parametrize("shape", [(8, 16), (32, 128), (64, 257)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_oracle(self, name, shape, dtype):
+        x = _rand(shape, dtype)
+        got = stencil2d(x, COEFFS_2D[name])
+        want = stencil2d_ref(x, COEFFS_2D[name])
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32), **_tol(dtype))
+
+    @pytest.mark.parametrize("block_rows", [1, 2, 4, 8, 16])
+    def test_block_size_invariance(self, block_rows):
+        x = _rand((16, 32), jnp.float32)
+        got = stencil2d(x, LAPLACE2D, block_rows=block_rows)
+        want = stencil2d_ref(x, LAPLACE2D)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6)
+
+    @pytest.mark.parametrize("iters", [1, 2, 5])
+    def test_iterations(self, iters):
+        x = _rand((16, 64), jnp.float32)
+        got = stencil2d(x, DIFFUSION2D, iterations=iters)
+        want = stencil2d_ref(x, DIFFUSION2D, iterations=iters)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_boundaries_untouched(self):
+        x = _rand((12, 24), jnp.float32)
+        out = np.asarray(stencil2d(x, JACOBI9, iterations=3))
+        xin = np.asarray(x)
+        np.testing.assert_array_equal(out[0], xin[0])
+        np.testing.assert_array_equal(out[-1], xin[-1])
+        np.testing.assert_array_equal(out[:, 0], xin[:, 0])
+        np.testing.assert_array_equal(out[:, -1], xin[:, -1])
+
+    def test_laplace_converges_to_mean_field(self):
+        # physical sanity: Laplace relaxation smooths toward boundary values
+        x = jnp.zeros((16, 16)).at[8, 8].set(100.0)
+        out = np.asarray(stencil2d(x, LAPLACE2D, iterations=200))
+        assert out[1:-1, 1:-1].max() < 1.0  # interior spike diffused out
+
+    def test_pick_block_rows_divides_and_fits(self):
+        for h, w in [(64, 64), (4096, 512), (1024, 128), (128, 100000)]:
+            bh = pick_block_rows(h, w)
+            assert h % bh == 0
+            assert bh * w * 4 * 8 <= 12 * 1024 * 1024 or bh == 1
+
+    def test_flops_per_cell(self):
+        assert flops_per_cell(LAPLACE2D) == 8     # 4 taps
+        assert flops_per_cell(DIFFUSION2D) == 10  # 5 taps
+        assert flops_per_cell(JACOBI9) == 18      # 9 taps
+
+    @given(st.integers(2, 6).map(lambda k: 2 ** k),
+           st.integers(4, 9).map(lambda k: 2 ** k),
+           st.sampled_from(list(COEFFS_2D)))
+    @settings(max_examples=12, deadline=None)
+    def test_property_random_shapes(self, h, w, name):
+        x = _rand((h, w), jnp.float32, seed=h * w)
+        got = stencil2d(x, COEFFS_2D[name])
+        want = stencil2d_ref(x, COEFFS_2D[name])
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-6)
+
+
+class TestStencil3D:
+    @pytest.mark.parametrize("name", list(TAPS_3D))
+    @pytest.mark.parametrize("shape", [(8, 8, 16), (16, 8, 32)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_oracle(self, name, shape, dtype):
+        x = _rand(shape, dtype)
+        got = stencil3d(x, TAPS_3D[name])
+        want = stencil3d_ref(x, TAPS_3D[name])
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32), **_tol(dtype))
+
+    @pytest.mark.parametrize("block_d", [1, 2, 4])
+    def test_block_size_invariance(self, block_d):
+        x = _rand((8, 8, 16), jnp.float32)
+        got = stencil3d(x, LAPLACE3D, block_d=block_d)
+        want = stencil3d_ref(x, LAPLACE3D)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6)
+
+    def test_iterations_and_boundaries(self):
+        x = _rand((8, 8, 8), jnp.float32)
+        out = np.asarray(stencil3d(x, DIFFUSION3D, iterations=4))
+        want = np.asarray(stencil3d_ref(x, DIFFUSION3D, iterations=4))
+        np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-6)
+        np.testing.assert_array_equal(out[0], np.asarray(x)[0])
+        np.testing.assert_array_equal(out[:, :, -1], np.asarray(x)[:, :, -1])
+
+    def test_pick_block_depth(self):
+        assert pick_block_depth(512, 64, 64) >= 4
+        bd = pick_block_depth(256, 32, 32)
+        assert 256 % bd == 0

@@ -1,0 +1,97 @@
+"""Round-robin closest-first mapping + topology tests."""
+import numpy as np
+import pytest
+
+from repro.core import ClusterConfig, TaskRegion
+from repro.core.mapper import chain_affine_map, round_robin_map
+from repro.core.topology import IPSlot
+
+
+def _graph(n):
+    tr = TaskRegion(device="cpu")
+    v = tr.buffer(np.zeros(4), "V")
+    d = tr.dep_tokens("d", n + 1)
+    for i in range(n):
+        tr.target(lambda x: x, v, depend_in=[d[i]], depend_out=[d[i + 1]])
+    return tr.graph()
+
+
+class TestTopology:
+    def test_ring_order_closest_first(self):
+        c = ClusterConfig(num_nodes=2, boards_per_node=3, ips_per_board=2)
+        ring = list(c.ring_order())
+        assert len(ring) == c.num_ips == 12
+        assert ring[0] == IPSlot(0, 0, 0)
+        assert ring[1] == IPSlot(0, 0, 1)
+        assert ring[2] == IPSlot(0, 1, 0)
+        assert [c.ip_index(ip) for ip in ring] == list(range(12))
+
+    def test_ring_hop_distance_unidirectional(self):
+        c = ClusterConfig(boards_per_node=6, ips_per_board=1)
+        ring = list(c.ring_order())
+        assert c.hop_distance(ring[0], ring[0]) == 0
+        assert c.hop_distance(ring[0], ring[1]) == 1
+        assert c.hop_distance(ring[5], ring[0]) == 1  # wrap link
+        assert c.hop_distance(ring[1], ring[0]) == 5  # all the way round
+
+    def test_torus_uses_shorter_way(self):
+        c = ClusterConfig(boards_per_node=6, ips_per_board=1, topology="torus")
+        ring = list(c.ring_order())
+        assert c.hop_distance(ring[1], ring[0]) == 1
+
+    def test_same_board_zero_hops(self):
+        c = ClusterConfig(boards_per_node=2, ips_per_board=4)
+        a, b = IPSlot(0, 1, 0), IPSlot(0, 1, 3)
+        assert c.hop_distance(a, b) == 0
+
+    def test_conf_json_roundtrip(self):
+        c = ClusterConfig(num_nodes=2, boards_per_node=6, ips_per_board=4,
+                          bitstreams={"laplace2d": "bit/laplace2d.bit"})
+        assert ClusterConfig.from_json(c.to_json()) == c
+
+    def test_bad_topology_rejected(self):
+        with pytest.raises(ValueError):
+            ClusterConfig(topology="star")
+
+
+class TestMapping:
+    def test_round_robin_wraps(self):
+        c = ClusterConfig(boards_per_node=2, ips_per_board=2)  # 4 slots
+        g = _graph(10)
+        m = round_robin_map(g, c)
+        idx = [m.cluster.ip_index(m.slot(t)) for t in range(10)]
+        assert idx == [0, 1, 2, 3, 0, 1, 2, 3, 0, 1]
+        assert m.rounds() == 3  # ceil(10/4) ring wraps (A-SWT reuse)
+
+    def test_paper_testbed_240_tasks(self):
+        c = ClusterConfig.paper_testbed()  # 6 boards × 4 IPs
+        g = _graph(240)
+        m = round_robin_map(g, c)
+        assert m.rounds() == 10
+        # consecutive pipeline tasks sit 0 or 1 board apart -> cheap edges
+        assert m.edge_hops(g) <= 240
+
+    def test_host_tasks_not_mapped(self):
+        tr = TaskRegion(device="cpu")
+        v = tr.buffer(np.zeros(2), "V")
+        tr.target(lambda x: x, v)
+        tr.task(lambda x: None, v, map={"V": "to"})
+        g = tr.graph()
+        m = round_robin_map(g, ClusterConfig())
+        assert m.slot(0) is not None
+        assert m.slot(1) is None
+
+    def test_chain_affine_beats_round_robin_on_parallel_chains(self):
+        """Two interleaved independent chains: affine mapping halves hops."""
+        tr = TaskRegion(device="cpu")
+        a = tr.buffer(np.zeros(2), "A")
+        b = tr.buffer(np.zeros(2), "B")
+        da = tr.dep_tokens("da", 5)
+        db = tr.dep_tokens("db", 5)
+        for i in range(4):  # interleave creation: a0 b0 a1 b1 ...
+            tr.target(lambda x: x, a, depend_in=[da[i]], depend_out=[da[i + 1]])
+            tr.target(lambda x: x, b, depend_in=[db[i]], depend_out=[db[i + 1]])
+        g = tr.graph()
+        c = ClusterConfig(boards_per_node=8, ips_per_board=1)
+        rr, ca = round_robin_map(g, c), chain_affine_map(g, c)
+        assert ca.edge_hops(g) < rr.edge_hops(g)

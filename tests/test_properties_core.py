@@ -1,0 +1,98 @@
+"""Hypothesis property tests for the task runtime's invariants.
+
+Invariants checked over randomly generated task programs:
+
+1. the topological schedule respects every dependence edge;
+2. deferred execution (with elision + chain fusion) computes the same final
+   buffer values as eager stock-OpenMP execution;
+3. deferred host traffic is never larger than eager host traffic;
+4. the round-robin mapping uses every IP slot before reusing any (fairness).
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ClusterConfig, GraphExecutor, TaskRegion
+from repro.core.elision import plan_deferred, plan_eager
+from repro.core.mapper import round_robin_map
+
+
+# A random program: n buffers, m tasks; each task reads a dependence token
+# window and bumps its own token, touching 1-2 buffers with random map dirs.
+@st.composite
+def task_programs(draw):
+    n_buf = draw(st.integers(1, 3))
+    n_task = draw(st.integers(1, 24))
+    n_tok = draw(st.integers(1, 4))
+    ops = []
+    for _ in range(n_task):
+        b = draw(st.integers(0, n_buf - 1))
+        tok = draw(st.integers(0, n_tok - 1))
+        din = draw(st.lists(st.integers(0, n_tok - 1), max_size=2))
+        coef = draw(st.integers(1, 3))
+        bias = draw(st.integers(-2, 2))
+        host = draw(st.booleans())
+        ops.append((b, tok, tuple(din), coef, bias, host))
+    return n_buf, n_tok, ops
+
+
+def _build(program, executor, defer):
+    n_buf, n_tok, ops = program
+    tr = TaskRegion(device="cpu", executor=executor, defer=defer)
+    bufs = [tr.buffer(np.arange(4, dtype=np.float64) + i, f"B{i}")
+            for i in range(n_buf)]
+    toks = tr.dep_tokens("t", n_tok)
+    for (b, tok, din, coef, bias, host) in ops:
+        fn = lambda x, c=coef, k=bias: x * c + k
+        kwargs = dict(depend_in=[toks[i] for i in din],
+                      depend_out=[toks[tok]], map={f"B{b}": "tofrom"})
+        if host:
+            tr.task(fn, bufs[b], **kwargs)
+        else:
+            tr.target(fn, bufs[b], **kwargs)
+    return tr, bufs
+
+
+@given(task_programs())
+@settings(max_examples=60, deadline=None)
+def test_deferred_equals_eager(program):
+    tr_e, bufs_e = _build(program, GraphExecutor(), defer=False)
+    tr_d, bufs_d = _build(program, GraphExecutor(), defer=True)
+    tr_e.executor.execute(tr_e.graph(), defer=False)
+    tr_d.executor.execute(tr_d.graph(), defer=True)
+    for be, bd in zip(bufs_e, bufs_d):
+        np.testing.assert_allclose(np.asarray(be.value), np.asarray(bd.value))
+
+
+@given(task_programs())
+@settings(max_examples=60, deadline=None)
+def test_elision_never_increases_host_traffic(program):
+    tr, _ = _build(program, GraphExecutor(), defer=True)
+    g = tr.graph()
+    assert (plan_deferred(g).host_transfer_count
+            <= plan_eager(g).host_transfer_count)
+    assert plan_deferred(g).host_bytes <= plan_eager(g).host_bytes
+
+
+@given(task_programs())
+@settings(max_examples=60, deadline=None)
+def test_schedule_respects_dependences(program):
+    tr, _ = _build(program, GraphExecutor(), defer=True)
+    g = tr.graph()
+    pos = {tid: i for i, tid in enumerate(g.order)}
+    for e in g.edges:
+        assert pos[e.src] < pos[e.dst]
+
+
+@given(task_programs(), st.integers(1, 4), st.integers(1, 4))
+@settings(max_examples=40, deadline=None)
+def test_round_robin_fairness(program, boards, ips):
+    tr, _ = _build(program, GraphExecutor(), defer=True)
+    g = tr.graph()
+    cluster = ClusterConfig(boards_per_node=boards, ips_per_board=ips)
+    m = round_robin_map(g, cluster)
+    counts = {}
+    for tid, slot in m.assignment.items():
+        counts[cluster.ip_index(slot)] = counts.get(cluster.ip_index(slot), 0) + 1
+    if counts:
+        assert max(counts.values()) - min(
+            counts.values() if len(counts) == cluster.num_ips else [0]) <= 1

@@ -1,0 +1,88 @@
+"""Hypothesis property tests for the sharding-rules engine.
+
+Invariants over random (arch, mesh) draws:
+1. every produced PartitionSpec only names axes that exist in the mesh;
+2. no mesh axis is used on two different dims of one leaf;
+3. every sharded dim is divisible by the product of its axis sizes
+   (the divisibility-fallback guarantee);
+4. optimizer-state shardings never exceed the param's rank;
+5. the same rules on a different mesh still satisfy 1–3 (the elastic
+   restart property).
+"""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import AbstractMesh
+
+from repro.configs import ARCHS, get_arch
+from repro.launch.steps import opt_state_struct, params_struct
+from repro.runtime import sharding as sr
+
+MESHES = [((2, 2), ("data", "model")),
+          ((2, 2, 2), ("pod", "data", "model")),
+          ((1, 4, 2), ("pod", "data", "model")),
+          ((4, 2), ("data", "model"))]
+
+
+def _check_specs(struct, shardings, mesh):
+    flat_s = jax.tree.leaves(struct)
+    flat_sh = jax.tree.leaves(shardings)
+    assert len(flat_s) == len(flat_sh)
+    for leaf, ns in zip(flat_s, flat_sh):
+        spec = tuple(ns.spec)
+        used = []
+        for d, entry in enumerate(spec):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            n = 1
+            for a in axes:
+                assert a in mesh.shape, (a, dict(mesh.shape))  # (1)
+                used.append(a)
+                n *= mesh.shape[a]
+            assert leaf.shape[d] % n == 0, (leaf.shape, spec)  # (3)
+        assert len(used) == len(set(used)), spec               # (2)
+        assert len(spec) <= len(leaf.shape)                    # (4)
+
+
+@given(st.sampled_from(sorted(ARCHS)), st.sampled_from(range(len(MESHES))))
+@settings(max_examples=30, deadline=None)
+def test_param_and_opt_shardings_valid(arch, mesh_i):
+    cfg = get_arch(arch)
+    shape, axes = MESHES[mesh_i]
+    mesh = AbstractMesh(shape, axes)
+    pstruct = params_struct(cfg)
+    psh = sr.param_shardings(pstruct, cfg, mesh)
+    _check_specs(pstruct, psh, mesh)
+    ostruct = opt_state_struct(cfg, pstruct)
+    osh = sr.opt_state_shardings(ostruct, pstruct, cfg, mesh)
+    _check_specs(ostruct, osh, mesh)
+
+
+@given(st.sampled_from(sorted(ARCHS)))
+@settings(max_examples=10, deadline=None)
+def test_elastic_remesh_property(arch):
+    """Same rules on two different meshes both yield valid plans — the
+    contract ckpt.elastic.reshard_restore depends on."""
+    cfg = get_arch(arch)
+    pstruct = params_struct(cfg)
+    for shape, axes in MESHES[:2]:
+        mesh = AbstractMesh(shape, axes)
+        _check_specs(pstruct, sr.param_shardings(pstruct, cfg, mesh), mesh)
+
+
+def test_dp_zero3_variant_unshards_tp():
+    import dataclasses
+    cfg = dataclasses.replace(get_arch("stablelm-12b"), tp_enabled=False,
+                              dp_over_model=True,
+                              fsdp_axes=("pod", "data", "model"))
+    mesh = AbstractMesh((2, 2, 2), ("pod", "data", "model"))
+    pstruct = params_struct(cfg)
+    psh = sr.param_shardings(pstruct, cfg, mesh)
+    _check_specs(pstruct, psh, mesh)
+    # no leaf may use plain 'model' TP entries (model now serves the batch);
+    # 'model' may appear only inside FSDP tuples
+    for ns in jax.tree.leaves(psh):
+        for entry in tuple(ns.spec):
+            assert entry != "model", ns.spec

@@ -1,0 +1,154 @@
+"""Unit tests: OpenMP depend/map semantics of the deferred task graph."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (Buffer, GraphExecutor, TaskGraph, TaskRegion,
+                        elision_report)
+from repro.core.taskgraph import DepToken, MapClause, Task
+
+
+def _mk_task(tid, fn, din=(), dout=(), bufs=(), device="cpu", dirs=None):
+    dirs = dirs or ["tofrom"] * len(bufs)
+    return Task(tid=tid, fn=fn, args=tuple(bufs), kwargs={},
+                depend_in=tuple(DepToken("d", i) for i in din),
+                depend_out=tuple(DepToken("d", i) for i in dout),
+                maps=tuple(MapClause(b, d) for b, d in zip(bufs, dirs)),
+                device=device)
+
+
+def _noop(*a, **k):
+    return a[0] if a else None
+
+
+class TestEdges:
+    def test_raw_dependence_chain(self):
+        b = Buffer(np.zeros(4), "V")
+        tasks = [_mk_task(i, _noop, din=(i,), dout=(i + 1,), bufs=(b,))
+                 for i in range(5)]
+        g = TaskGraph(tasks)
+        assert len(g.edges) == 4
+        assert g.order == [0, 1, 2, 3, 4]
+        assert [(e.src, e.dst) for e in g.edges] == [(i, i + 1) for i in range(4)]
+
+    def test_fanout_fanin(self):
+        b = Buffer(np.zeros(4), "V")
+        producer = _mk_task(0, _noop, dout=(0,), bufs=(b,))
+        readers = [_mk_task(i, _noop, din=(0,), bufs=(b,)) for i in (1, 2, 3)]
+        # writer after readers: anti-dependence serializes it behind them
+        writer = _mk_task(4, _noop, dout=(0,), bufs=(b,))
+        g = TaskGraph([producer, *readers, writer])
+        assert {1, 2, 3} <= set(g.successors(0))  # RAW fanout (+WAW to 4)
+        assert {1, 2, 3} <= set(g.predecessors(4))  # anti-deps serialize writer
+
+    def test_waw_edge(self):
+        b = Buffer(np.zeros(4), "V")
+        t0 = _mk_task(0, _noop, dout=(0,), bufs=(b,))
+        t1 = _mk_task(1, _noop, dout=(0,), bufs=(b,))
+        g = TaskGraph([t0, t1])
+        assert [(e.src, e.dst) for e in g.edges] == [(0, 1)]
+
+    def test_cyclic_tokens_cannot_deadlock(self):
+        # OpenMP depend edges always point from earlier- to later-created
+        # tasks, so "cyclic" token patterns still yield a valid schedule.
+        b = Buffer(np.zeros(4), "V")
+        t0 = _mk_task(0, _noop, din=(1,), dout=(0,), bufs=(b,))
+        t1 = _mk_task(1, _noop, din=(0,), dout=(1,), bufs=(b,))
+        g = TaskGraph([t0, t1])
+        assert g.order == [0, 1]
+        assert [(e.src, e.dst) for e in g.edges] == [(0, 1)]
+
+    def test_chains_split_on_fanout(self):
+        b = Buffer(np.zeros(4), "V")
+        t0 = _mk_task(0, _noop, dout=(0,), bufs=(b,))
+        t1 = _mk_task(1, _noop, din=(0,), dout=(1,), bufs=(b,))
+        t2 = _mk_task(2, _noop, din=(1,), bufs=(b,))
+        t3 = _mk_task(3, _noop, din=(1,), bufs=(b,))
+        g = TaskGraph([t0, t1, t2, t3])
+        chains = g.chains()
+        assert [0, 1] in chains
+        assert [2] in chains and [3] in chains
+
+
+class TestRegionExecution:
+    def test_listing3_pipeline_semantics(self):
+        """The paper's Listing 3 shape: N chained increments of V."""
+        n = 16
+        with TaskRegion(device="cpu") as tr:
+            v = tr.buffer(jnp.zeros(8), "V")
+            deps = tr.dep_tokens("deps", n + 1)
+            for i in range(n):
+                tr.target(lambda x: x + 1.0, v,
+                          depend_in=[deps[i]], depend_out=[deps[i + 1]],
+                          map={"V": "tofrom"})
+        np.testing.assert_allclose(np.asarray(v.value), np.full(8, n))
+
+    def test_depend_matches_only_preceding_tasks(self):
+        # OpenMP: depend(in:x) orders against *previously created* out:x
+        # tasks only. A later out:x writer does NOT order before the reader.
+        with TaskRegion(device="cpu") as tr:
+            v = tr.buffer(jnp.ones(4), "V")
+            d = tr.dep_tokens("d", 2)
+            tr.target(lambda x: x * 2.0, v, depend_in=[d[0]],
+                      depend_out=[d[1]], map={"V": "tofrom"})
+            tr.target(lambda x: x + 3.0, v, depend_out=[d[0]],
+                      map={"V": "tofrom"})
+        # creation order is a valid schedule: (1*2)+3
+        np.testing.assert_allclose(np.asarray(v.value), 5 * np.ones(4))
+
+    def test_multi_buffer_task(self):
+        with TaskRegion(device="cpu") as tr:
+            a = tr.buffer(jnp.ones(4), "A")
+            b = tr.buffer(jnp.zeros(4), "B")
+            d = tr.dep_tokens("d", 1)
+            tr.target(lambda x, y: x + y + 1.0, a, b, depend_out=[d[0]],
+                      map={"A": "to", "B": "from"})
+        np.testing.assert_allclose(np.asarray(b.value), 2 * np.ones(4))
+        np.testing.assert_allclose(np.asarray(a.value), np.ones(4))  # unmodified
+
+    def test_host_and_device_tasks_mix(self):
+        with TaskRegion(device="cpu") as tr:
+            v = tr.buffer(np.zeros(4), "V")
+            d = tr.dep_tokens("d", 3)
+            tr.target(lambda x: x + 1, v, depend_out=[d[0]], map={"V": "tofrom"})
+            tr.task(lambda x: x * 10, v, depend_in=[d[0]], depend_out=[d[1]],
+                    map={"V": "tofrom"})  # host task forces D2H/H2D boundary
+            tr.target(lambda x: x + 5, v, depend_in=[d[1]], depend_out=[d[2]],
+                      map={"V": "tofrom"})
+        np.testing.assert_allclose(np.asarray(v.value), np.full(4, 15.0))
+
+    def test_region_exception_does_not_execute(self):
+        ran = []
+        try:
+            with TaskRegion(device="cpu") as tr:
+                v = tr.buffer(np.zeros(2), "V")
+                tr.target(lambda x: ran.append(1) or x, v)
+                raise RuntimeError("boom")
+        except RuntimeError:
+            pass
+        assert ran == []
+
+    def test_eager_vs_deferred_same_result(self):
+        def build(defer):
+            ex = GraphExecutor()
+            with TaskRegion(device="cpu", executor=ex, defer=defer) as tr:
+                v = tr.buffer(jnp.arange(6, dtype=jnp.float32), "V")
+                d = tr.dep_tokens("d", 9)
+                for i in range(8):
+                    tr.target(lambda x, k=i: x * 1.5 - k, v,
+                              depend_in=[d[i]], depend_out=[d[i + 1]],
+                              map={"V": "tofrom"})
+            return np.asarray(v.value), tr.transfer_log
+        out_e, log_e = build(False)
+        out_d, log_d = build(True)
+        np.testing.assert_allclose(out_e, out_d, rtol=1e-6)
+        assert log_e.host_transfers == 16
+        assert log_d.host_transfers == 2
+        assert log_d.dispatches < log_e.dispatches  # chain fusion
+
+    def test_return_arity_mismatch_raises(self):
+        with pytest.raises(ValueError, match="returned"):
+            with TaskRegion(device="cpu") as tr:
+                a = tr.buffer(np.ones(2), "A")
+                b = tr.buffer(np.ones(2), "B")
+                tr.target(lambda x, y: x, a, b, map={"A": "from", "B": "from"})

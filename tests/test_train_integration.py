@@ -1,0 +1,59 @@
+"""End-to-end launcher integration: training runs, checkpoints, and a
+killed-and-restarted run resumes to the same state (deterministic data
+replay + checkpoint restore through the real CLI)."""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_train(steps, ckpt_dir, extra=()):
+    env = dict(os.environ, PYTHONPATH=os.path.join(_REPO, "src"))
+    cmd = [sys.executable, "-m", "repro.launch.train", "--arch",
+           "smollm-135m", "--reduced", "--steps", str(steps),
+           "--batch", "4", "--seq", "32", "--ckpt-every", "10",
+           "--log-every", "1000", "--ckpt-dir", ckpt_dir, *extra]
+    out = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                         timeout=1200)
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    return out.stdout
+
+
+@pytest.mark.slow
+def test_train_checkpoint_resume_matches_straight_run(tmp_path):
+    d_straight = str(tmp_path / "straight")
+    d_resumed = str(tmp_path / "resumed")
+
+    out_a = _run_train(30, d_straight)
+    # interrupted run: 20 steps (checkpoints at 10, 20), then resume to 30
+    _run_train(20, d_resumed)
+    out_b = _run_train(30, d_resumed)
+    assert "resumed from step 20" in out_b
+
+    def final_loss(txt):
+        for line in txt.splitlines():
+            if line.startswith("final step"):
+                return float(line.split()[-1])
+        raise AssertionError(txt)
+
+    # deterministic data replay + exact restore ⇒ identical final loss
+    assert final_loss(out_a) == pytest.approx(final_loss(out_b), rel=1e-5)
+
+
+@pytest.mark.slow
+def test_train_loss_decreases(tmp_path):
+    out = _run_train(120, str(tmp_path / "run"))
+    lines = [l for l in out.splitlines() if l.startswith("final step")]
+    assert lines, out
+    # synthetic corpus has learnable bigram structure: loss must drop well
+    # below ln(vocab)=ln(256)≈5.55-per-token scale... reduced configs start
+    # ~40 (random logits on 256 vocab with big init); check a real decrease
+    first = [l for l in out.splitlines() if l.startswith("step ")][0]
+    l0 = float(first.split()[-1])
+    l1 = float(lines[0].split()[-1])
+    assert l1 < l0 * 0.9, (l0, l1)

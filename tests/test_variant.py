@@ -1,0 +1,71 @@
+"""declare_variant context-selection tests (paper §III-A, Listing 3)."""
+import numpy as np
+
+from repro.core import GraphExecutor, TaskRegion, declare_variant, resolve
+from repro.core.variant import base_of, call_variant, register_arch
+
+
+def do_scale(x):          # software base — the verification oracle
+    return x * 2.0
+
+
+@declare_variant(base=do_scale, match="tpu")
+def hw_scale(x):          # "hardware IP" variant
+    return x + x          # same math, different implementation
+
+
+@declare_variant(base=do_scale, match="vc709")
+def vc709_scale(x):
+    return 2.0 * x
+
+
+class TestResolve:
+    def test_base_when_no_arch(self):
+        assert resolve(do_scale, None) is do_scale
+        assert resolve(do_scale, "cpu") is do_scale
+
+    def test_exact_match(self):
+        assert resolve(do_scale, "tpu") is hw_scale
+        assert resolve(do_scale, "vc709") is vc709_scale
+
+    def test_fallback_chain(self):
+        # v5e / interpret fall back to the generic tpu variant
+        assert resolve(do_scale, "tpu-v5e") is hw_scale
+        assert resolve(do_scale, "tpu-interpret") is hw_scale
+
+    def test_resolving_a_variant_finds_family(self):
+        # resolving the hw function itself under cpu returns the base
+        assert resolve(hw_scale, "cpu") is do_scale
+        assert base_of(hw_scale) is do_scale
+
+    def test_unknown_arch_uses_base(self):
+        register_arch("fpga-x", None)
+        assert resolve(do_scale, "fpga-x") is do_scale
+
+    def test_call_variant(self):
+        np.testing.assert_allclose(call_variant(do_scale, "tpu", np.ones(3)),
+                                   2 * np.ones(3))
+
+
+class TestRegionIntegration:
+    def test_device_flag_selects_hw_variant(self):
+        """Same program, different device flag — the paper's verification flow."""
+        calls = []
+
+        def do_op(x):
+            calls.append("sw")
+            return x + 1
+
+        @declare_variant(base=do_op, match="vc709")
+        def hw_op(x):
+            calls.append("hw")
+            return x + 1
+
+        for device, expect in (("cpu", "sw"), ("vc709", "hw")):
+            calls.clear()
+            ex = GraphExecutor(fuse_chains=False)
+            with TaskRegion(device=device, executor=ex) as tr:
+                v = tr.buffer(np.zeros(2), "V")
+                tr.target(do_op, v, map={"V": "tofrom"})
+            assert calls == [expect], device
+            np.testing.assert_allclose(np.asarray(v.value), np.ones(2))
